@@ -1,0 +1,129 @@
+"""Perf-iteration driver: compile one cell under a named variant and print
+the roofline terms (used to produce EXPERIMENTS.md §Perf).
+
+    PYTHONPATH=src python -m benchmarks.hillclimb <arch> <shape> <variant>
+
+Variants (composable with '+'):
+  baseline        paper-faithful: S-C 'full' remat, bf16 M-P, TP experts,
+                  int8 KV cache
+  normbf16        bf16-cotangent RMSNorm (halves TP dx all-reduce width)
+  dots            remat policy 'dots_nobatch' (save matmul outs, less
+                  recompute)
+  cechunk         chunked cross-entropy (512-token chunks)
+  ep              MoE expert parallelism (experts sharded, full FFN width)
+  seg2/seg4       S-C segment size 2/4 (checkpoint every 2nd/4th layer)
+"""
+from __future__ import annotations
+
+import sys
+
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                           + " --xla_force_host_platform_device_count=512").strip()
+
+import dataclasses as dc
+
+
+def apply_variant(cfg, variant: str):
+    """Returns (cfg, train_kwargs)."""
+    from repro.core.checkpoint import CheckpointConfig
+    tags = variant.split("+")
+    remat = CheckpointConfig(enabled=True, policy="full", segment_size=1)
+    ce_chunk = 0
+    for t in tags:
+        if t in ("baseline", ""):
+            continue
+        elif t == "normbf16":
+            cfg = dc.replace(cfg, norm_bf16_grad=True)
+        elif t == "dots":
+            remat = dc.replace(remat, policy="dots_nobatch")
+        elif t == "savear":
+            remat = dc.replace(remat, save_names=("attn_out", "ffn_out"))
+        elif t == "cechunk":
+            ce_chunk = 512
+        elif t == "ep":
+            cfg = dc.replace(cfg, moe=dc.replace(cfg.moe, expert_mode="ep"))
+        elif t.startswith("seg"):
+            remat = dc.replace(remat, segment_size=int(t[3:]))
+        elif t == "mesh32x8":
+            import repro.launch.mesh as _mesh2
+            import jax as _jax2
+            _mesh2.make_production_mesh = (
+                lambda *, multi_pod=False: _jax2.make_mesh(
+                    (32, 8), ("data", "model"),
+                    axis_types=(_jax2.sharding.AxisType.Auto,) * 2))
+        elif t == "mesh256x1":
+            import repro.launch.mesh as _mesh
+            import jax as _jax
+            _mesh.make_production_mesh = (
+                lambda *, multi_pod=False: _jax.make_mesh(
+                    (256, 1), ("data", "model"),
+                    axis_types=(_jax.sharding.AxisType.Auto,) * 2))
+        elif t == "dponly":
+            # tiny models: drop TP entirely (replicate over the model axis);
+            # only the DP weight-grad all-reduce remains
+            from jax.sharding import PartitionSpec as P
+            import jax as _jax
+            import repro.distributed.sharding as _shd
+
+            def all_repl(cfg2, params_shape):
+                return _jax.tree_util.tree_map(lambda _: P(), params_shape)
+            _shd.param_specs = all_repl
+        elif t == "twotier":
+            import repro.models.transformer as tr
+            tr.init_cache = (lambda cfg2, b, s, quantized=True,
+                             dtype=None, _f=tr.init_cache_two_tier:
+                             _f(cfg2, b, s, quantized=quantized))
+
+            def decode_patched(params, cfg2, cache, tokens_t, *, policy,
+                               quantized=True, kvq_backend="ref",
+                               scan_unroll=1, mesh=None, enc_out=None,
+                               _f=tr.decode_step_two_tier):
+                return _f(params, cfg2, cache, tokens_t, policy=policy,
+                          quantized=quantized, kvq_backend=kvq_backend,
+                          mesh=mesh)
+            tr.decode_step = decode_patched
+        else:
+            raise ValueError(f"unknown variant tag {t!r}")
+    return cfg, dict(remat=remat, ce_chunk=ce_chunk)
+
+
+def main():
+    arch, shape, variant = sys.argv[1], sys.argv[2], sys.argv[3]
+    import repro.configs as C
+    from repro.launch import dryrun as dr
+    import repro.launch.mesh as mesh_mod
+    import repro.train.train_step as ts
+
+    base_cfg = C.get_config(arch)
+    cfg, kw = apply_variant(base_cfg, variant)
+
+    # patch the config registry + TrainConfig defaults for this run
+    C.get_config = lambda a, _c=cfg: _c
+    orig_tc = ts.TrainConfig
+
+    def patched_tc(*a, **k):
+        k.setdefault("remat", kw["remat"])
+        return orig_tc(*a, **k)
+    ts.TrainConfig = patched_tc
+
+    if kw["ce_chunk"]:
+        import repro.models.transformer as tr
+        orig_loss = tr.loss_fn
+
+        def loss_patched(*a, **k2):
+            k2.setdefault("ce_chunk", kw["ce_chunk"])
+            return orig_loss(*a, **k2)
+        tr.loss_fn = loss_patched
+
+    mesh = mesh_mod.make_production_mesh()
+    r = dr.dryrun_cell(arch, shape, mesh, verbose=True)
+    print(f"VARIANT={variant} compute={r['compute_s']*1e3:.1f}ms "
+          f"memory_lb={r['memory_s']*1e3:.1f}ms "
+          f"collective={r['collective_s']*1e3:.1f}ms "
+          f"useful={r['useful_flops_frac']:.2f} "
+          f"raw_coll={r['raw_uncorrected']['coll']/1e9:.2f}GB")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,87 @@
+"""Format dry-run JSON into the EXPERIMENTS.md roofline tables.
+
+    PYTHONPATH=src python -m benchmarks.roofline_report dryrun_singlepod.json
+
+Definitions:
+  ideal_s        = MODEL_FLOPS / (chips x 197 TF/s)  (6ND train, 2ND infer)
+  roofline frac  = ideal_s / max(compute_s, memory_s, collective_s)
+                   -> "how close the dominant roofline term is to the
+                   model-FLOP ideal"; 1.0 = perfectly compute-bound with
+                   zero overhead.
+  collective_s is clamped to the raw full-compile parse when the L-probe
+  extrapolation is unstable (SPMD can make different sharding choices at
+  L=1 vs L=2; a negative delta means the probe disagreed).
+"""
+from __future__ import annotations
+
+import json
+import sys
+
+PEAK = 197e12
+ICI = 50e9
+
+
+def _chips(mesh_str: str) -> int:
+    n = 1
+    for part in mesh_str.split(" x "):
+        n *= int(part.split("=")[1])
+    return n
+
+
+def load(path):
+    with open(path) as f:
+        d = json.load(f)
+    return d.get("results", []), d.get("failures", [])
+
+
+def enrich(r):
+    n_chips = _chips(r["mesh"])
+    ideal = r["model_flops"] / (n_chips * PEAK)
+    coll = r["collective_s"]
+    raw_coll = r.get("raw_uncorrected", {}).get("coll", 0) / ICI
+    if coll < raw_coll:          # unstable extrapolation -> raw lower bound
+        coll = raw_coll
+    terms = {"compute_s": r["compute_s"], "memory_s": r["memory_s"],
+             "collective_s": coll}
+    dom = max(terms, key=terms.get)
+    frac = ideal / max(terms.values()) if max(terms.values()) > 0 else 0.0
+    return {**r, "collective_s": coll, "ideal_s": ideal,
+            "bottleneck": dom, "roofline_frac": frac}
+
+
+def table(results):
+    hdr = ("| arch | shape | ideal ms | compute ms | memory(lb) ms | "
+           "collective ms | bottleneck | useful-FLOP | roofline frac |")
+    sep = "|" + "---|" * 9
+    rows = [hdr, sep]
+    for r in sorted(results, key=lambda r: (r["arch"], r["shape"])):
+        rows.append(
+            f"| {r['arch']} | {r['shape']} | {r['ideal_s']*1e3:.2f} | "
+            f"{r['compute_s']*1e3:.2f} | {r['memory_s']*1e3:.2f} | "
+            f"{r['collective_s']*1e3:.2f} | "
+            f"{r['bottleneck'].replace('_s','')} | "
+            f"{r['useful_flops_frac']:.2f} | {r['roofline_frac']:.3f} |")
+    return "\n".join(rows)
+
+
+def main():
+    for path in sys.argv[1:]:
+        results, failures = load(path)
+        results = [enrich(r) for r in results]
+        if results:
+            print(f"\n## {path} ({results[0]['mesh']})\n")
+        print(table(results))
+        print(f"\ncells OK: {len(results)}, failed: {len(failures)}")
+        for f in failures:
+            print(f"  FAIL {f['arch']} x {f['shape']}: {f['error'][:100]}")
+        if results:
+            worst = min(results, key=lambda r: r["roofline_frac"])
+            coll_bound = max(results, key=lambda r: r["collective_s"])
+            print(f"\nworst roofline frac : {worst['arch']} x {worst['shape']}"
+                  f" ({worst['roofline_frac']:.4f})")
+            print(f"most collective-bound: {coll_bound['arch']} x "
+                  f"{coll_bound['shape']} ({coll_bound['collective_s']*1e3:.0f} ms)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,279 @@
+"""Benchmark harness — one benchmark per paper table/figure.
+
+  fig8_memory     GPU-memory-in-1-iteration analogue (paper Fig. 8):
+                  compiled temp bytes for ResNet-18, standard vs S-C.
+  fig9_time_acc   time+accuracy parity for 10-epoch CIFAR runs (paper
+                  Fig. 9), reduced to CPU scale: baseline vs E-D vs S-C
+                  vs E-D+S-C vs +M-P on synthetic CIFAR.
+  fig10_pipelines memory across pipelines B / E-D / M-P / S-C /
+                  S-C + M-P for ResNet and an LM (paper Fig. 10).
+  tbl_codec       encode/decode throughput + compression ratios for
+                  Algorithms 1/3/4 and the u32 codec (paper II.A claims:
+                  16x passage saving, >=20% time saving).
+  tbl_pipeline    parallel E-D loader: epoch time with/without the
+                  background encode thread (paper Fig. 1).
+  tbl_compression gradient-compression payload bytes vs fp32 (framework
+                  distributed-optimization feature).
+
+Prints ``name,us_per_call,derived`` CSV rows (plus derived metrics).
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _rows(name, us, derived=""):
+    print(f"{name},{us:.1f},{derived}", flush=True)
+
+
+def _timeit(fn, *args, warmup=1, iters=3):
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = jax.block_until_ready(fn(*args))
+    return (time.perf_counter() - t0) / iters * 1e6, out
+
+
+def _temp_bytes(fn, *sds):
+    c = jax.jit(fn).lower(*sds).compile()
+    m = c.memory_analysis()
+    return int(getattr(m, "temp_size_in_bytes", 0))
+
+
+def _residual_mb(loss_of_params, params, *rest):
+    """Bytes saved between forward and backward (the paper's 'extra memory
+    to back-propagate'): size of the vjp residual pytree, via eval_shape
+    (no allocation).  Unlike XLA temp bytes on CPU, this directly reflects
+    what S-C changes."""
+    out = jax.eval_shape(
+        lambda p, *r: jax.vjp(lambda pp: loss_of_params(pp, *r), p),
+        params, *rest)
+    leaves = jax.tree_util.tree_leaves(out)
+    return sum(x.size * x.dtype.itemsize for x in leaves) / 2 ** 20
+
+
+# ---------------------------------------------------------------------------
+def fig8_memory():
+    """ResNet-18 activation memory, standard vs sequential checkpoints."""
+    from repro.models import cnn
+    cfg = cnn.resnet18(stem_stride=2)
+    params = cnn.init_params(cfg, jax.random.PRNGKey(0))
+    imgs = jax.ShapeDtypeStruct((16, 512, 512, 3), jnp.float32)
+    labels = jax.ShapeDtypeStruct((16,), jnp.int32)
+
+    for name, seg in [("fig8_resnet18_standard", 0),
+                      ("fig8_resnet18_sc2", 2),
+                      ("fig8_resnet18_sc4", 4),
+                      ("fig8_resnet18_sc8", 8)]:
+        def loss(p, im, lb, _seg=seg):
+            return cnn.loss_fn(p, cfg, im, lb, num_segments=_seg)[0]
+        mb = _residual_mb(loss, params, imgs, labels)
+        _rows(name, 0.0, f"residual_mb={mb:.0f}")
+
+
+def fig10_pipelines():
+    """Memory across optimization pipelines for ResNet-50 and a small LM."""
+    from repro.models import cnn
+    from repro import configs
+    from repro.models import transformer
+    from repro.core.checkpoint import CheckpointConfig
+    from repro.core.mixed_precision import get_policy
+
+    cfg = cnn.resnet50(stem_stride=2)
+    params = cnn.init_params(cfg, jax.random.PRNGKey(0))
+    imgs_f = jax.ShapeDtypeStruct((16, 512, 512, 3), jnp.float32)
+    imgs_p = jax.ShapeDtypeStruct((4, 512, 512, 3), jnp.uint32)
+    labels = jax.ShapeDtypeStruct((16,), jnp.int32)
+
+    cases = [
+        ("fig10_resnet50_B", dict(num_segments=0), imgs_f),
+        ("fig10_resnet50_ED", dict(num_segments=0, decode_backend="ref"),
+         imgs_p),
+        ("fig10_resnet50_SC", dict(num_segments=8), imgs_f),
+        ("fig10_resnet50_ED_SC", dict(num_segments=8, decode_backend="ref"),
+         imgs_p),
+    ]
+    for name, kw, im_sds in cases:
+        def loss(p, im, lb, _kw=kw):
+            return cnn.loss_fn(p, cfg, im, lb, **_kw)[0]
+        mb = _residual_mb(loss, params, im_sds, labels)
+        # E-D also cuts the host->device stream 4x (u32 vs f32 input bytes)
+        inp_mb = np.prod(im_sds.shape) * im_sds.dtype.itemsize / 2 ** 20
+        _rows(name, 0.0, f"residual_mb={mb:.0f},input_mb={inp_mb:.0f}")
+
+    # LM variant: remat on/off x M-P on/off (smoke-sized llama)
+    lcfg = configs.smoke_config("llama3-8b")
+    lp = transformer.init_params(lcfg, jax.random.PRNGKey(0))
+    batch = {"tokens": jax.ShapeDtypeStruct((8, 256), jnp.int32),
+             "labels": jax.ShapeDtypeStruct((8, 256), jnp.int32)}
+    for name, remat, pol in [
+            ("fig10_lm_B", False, "full"), ("fig10_lm_MP", False, "bf16"),
+            ("fig10_lm_SC", True, "full"), ("fig10_lm_SC_MP", True, "bf16")]:
+        def loss(p, b, _r=remat, _p=pol):
+            return transformer.loss_fn(
+                p, lcfg, b, policy=get_policy(_p),
+                remat=CheckpointConfig(enabled=_r))[0]
+        mb = _residual_mb(loss, lp, batch)
+        _rows(name, 0.0, f"residual_mb={mb:.0f}")
+
+
+def fig9_time_acc():
+    """Accuracy/time parity across pipelines (reduced CIFAR run)."""
+    from repro.data.synthetic import make_cifar_like
+    from repro.data.pipeline import ParallelEncodedLoader
+    from repro.models import cnn
+    from repro.optim import adamw
+
+    imgs, labels = make_cifar_like(n=1024, seed=0)
+    cfg = cnn.resnet18()
+    steps = 60
+
+    def run(num_segments, codec, policy="full"):
+        params = cnn.init_params(cfg, jax.random.PRNGKey(0))
+        opt = adamw.init(params)
+        ocfg = adamw.AdamWConfig(lr=3e-3, warmup_steps=5, total_steps=steps,
+                                 weight_decay=0.0)
+
+        @jax.jit
+        def step(params, opt, im, lb):
+            decode = "ref" if codec == "u32" else None
+
+            def lossp(p):
+                if policy == "bf16":
+                    p = jax.tree_util.tree_map(
+                        lambda x: x.astype(jnp.bfloat16)
+                        if jnp.issubdtype(x.dtype, jnp.floating) else x, p)
+                return cnn.loss_fn(p, cfg, im, lb,
+                                   num_segments=num_segments,
+                                   decode_backend=decode)
+
+            (l, aux), g = jax.value_and_grad(lossp, has_aux=True)(params)
+            g = jax.tree_util.tree_map(lambda x: x.astype(jnp.float32), g)
+            params2, opt2, _ = adamw.update(ocfg, g, opt, params)
+            return params2, opt2, l, aux["acc"]
+
+        t0 = time.perf_counter()
+        accs = []
+        with ParallelEncodedLoader(imgs, labels, 32, codec=codec,
+                                   prefetch=2) as dl:
+            for _ in range(steps):
+                enc, lb = next(dl)
+                im = jnp.asarray(enc)
+                params, opt, l, acc = step(params, opt, im, jnp.asarray(lb))
+                accs.append(float(acc))
+        dt = time.perf_counter() - t0
+        return dt, float(np.mean(accs[-10:]))
+
+    for name, seg, codec, pol in [
+            ("fig9_baseline", 0, "none", "full"),
+            ("fig9_ED", 0, "u32", "full"),
+            ("fig9_SC", 6, "none", "full"),
+            ("fig9_ED_SC", 6, "u32", "full"),
+            ("fig9_ED_SC_MP", 6, "u32", "bf16")]:
+        dt, acc = run(seg, codec, pol)
+        _rows(name, dt * 1e6 / steps, f"acc={acc:.3f},total_s={dt:.1f}")
+
+
+def tbl_codec():
+    """Codec throughput + ratios (paper claims up-to 16x passage saving)."""
+    from repro.core import encoding
+    rng = np.random.default_rng(0)
+    batch = rng.integers(0, 256, (16, 512, 512, 3), dtype=np.uint8)
+
+    us, _ = _timeit(lambda: encoding.pack_u8_to_u32(batch), iters=5)
+    _rows("codec_u32_pack_16x512x512x3", us,
+          f"ratio_vs_f32={encoding.compression_ratio(4, 'u32'):.0f}x")
+    packed = np.asarray(encoding.pack_u8_to_u32(batch))
+    us, _ = _timeit(lambda: encoding.unpack_u32_to_u8(packed), iters=5)
+    _rows("codec_u32_unpack", us, "exact=True")
+
+    sub = batch[:6]
+    us, _ = _timeit(lambda: encoding.encode_base256(sub), iters=3)
+    _rows("codec_base256_encode_6imgs", us, "ratio=3x,f64")
+    enc = encoding.encode_base256(sub)
+    us, _ = _timeit(lambda: encoding.decode_base256(enc, 6), iters=3)
+    _rows("codec_base256_decode", us, "exact=True")
+
+    sub7 = batch[:7]
+    us, _ = _timeit(lambda: encoding.encode_lossless(sub7), iters=3)
+    _rows("codec_lossless_encode_7imgs", us, "alg4,f64+offsets")
+
+    # jit'd fused decode layer (the network's first layer)
+    from repro.kernels.pack import ops as pack_ops
+    pj = jnp.asarray(packed)
+    us, _ = _timeit(lambda: pack_ops.decode(pj, backend="ref"), iters=5)
+    _rows("codec_decode_layer_jit", us, "fused_normalize=True")
+
+
+def tbl_pipeline():
+    """Parallel E-D: background-thread encoding vs inline (paper Fig. 1)."""
+    from repro.data.synthetic import make_cifar_like
+    from repro.data.pipeline import ParallelEncodedLoader
+    from repro.core import encoding
+
+    imgs, labels = make_cifar_like(n=2048, seed=0)
+    bs, steps = 32, 64
+    train_ms = 3.0  # simulated device step time
+
+    def consume_parallel():
+        with ParallelEncodedLoader(imgs, labels, bs, codec="u32",
+                                   prefetch=4) as dl:
+            t0 = time.perf_counter()
+            for _ in range(steps):
+                next(dl)
+                time.sleep(train_ms / 1e3)
+            return time.perf_counter() - t0
+
+    def consume_inline():
+        rng = np.random.default_rng(0)
+        t0 = time.perf_counter()
+        for _ in range(steps):
+            idx = rng.integers(0, len(imgs), bs)
+            encoding.pack_u8_to_u32(imgs[idx])
+            time.sleep(train_ms / 1e3)
+        return time.perf_counter() - t0
+
+    tp = consume_parallel()
+    ti = consume_inline()
+    _rows("pipeline_parallel_ED", tp / steps * 1e6,
+          f"speedup_vs_inline={ti/tp:.2f}x")
+    _rows("pipeline_inline_ED", ti / steps * 1e6, "")
+
+
+def tbl_compression():
+    from repro.optim import compression
+    g = {"w": jnp.asarray(np.random.default_rng(0)
+                          .normal(size=(1 << 20,)).astype(np.float32))}
+    us, (payload, _) = _timeit(
+        lambda: compression.compress_with_feedback(
+            g, None, jax.random.PRNGKey(0), codec="int8"), iters=3)
+    raw = 4 * (1 << 20)
+    _rows("grad_compress_int8_1M", us,
+          f"payload_ratio={raw/compression.payload_bytes(payload):.1f}x")
+    us, (payload, _) = _timeit(
+        lambda: compression.compress_with_feedback(
+            g, None, jax.random.PRNGKey(0), codec="topk", topk_frac=0.01),
+        iters=3)
+    _rows("grad_compress_topk1pct_1M", us,
+          f"payload_ratio={raw/compression.payload_bytes(payload):.1f}x")
+
+
+BENCHES = [tbl_codec, tbl_pipeline, tbl_compression, fig8_memory,
+           fig10_pipelines, fig9_time_acc]
+
+
+def main() -> None:
+    print("name,us_per_call,derived")
+    for b in BENCHES:
+        t0 = time.time()
+        b()
+        print(f"# {b.__name__} done in {time.time()-t0:.1f}s", flush=True)
+
+
+if __name__ == "__main__":
+    main()

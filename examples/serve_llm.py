@@ -1,0 +1,88 @@
+"""Batched serving driver: prefill + decode with an int8-encoded KV cache.
+
+The paper's E-D idea deployed for inference: the KV cache is *stored
+encoded* (int8 + scales, via kernels/kvq) and decoded inside the attention
+read, halving cache bytes vs bf16.  Runs a small model end-to-end on CPU:
+
+    python examples/serve_llm.py [--arch llama3-8b] [--batch 4] [--gen 24]
+"""
+import argparse
+import os
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import configs
+from repro.models import transformer
+from repro.train.serve_step import build_decode_step, build_prefill_step
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="llama3-8b")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--gen", type=int, default=24)
+    ap.add_argument("--no-quantize", action="store_true")
+    args = ap.parse_args()
+
+    cfg = configs.smoke_config(args.arch)
+    quant = not args.no_quantize
+    params = transformer.init_params(cfg, jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+    prompts = jnp.asarray(
+        rng.integers(0, cfg.vocab, (args.batch, args.prompt_len)), jnp.int32)
+
+    prefill = jax.jit(build_prefill_step(cfg, policy_name="bf16",
+                                         quantized=quant))
+    decode = jax.jit(build_decode_step(cfg, policy_name="bf16",
+                                       quantized=quant))
+
+    t0 = time.time()
+    last_logits, cache = prefill(params, {"tokens": prompts})
+    # grow the cache to prompt + gen: pad the sequence dim
+    def grow(path, x):
+        name = str(path[-1].key)
+        if name in ("k", "v"):
+            pad = [(0, 0)] * x.ndim
+            pad[3] = (0, args.gen)
+            return jnp.pad(x, pad)
+        if name in ("k_scale", "v_scale"):
+            return jnp.pad(x, [(0, 0)] * (x.ndim - 1) + [(0, args.gen)])
+        if name in ("mla_lat", "mla_rope"):
+            return jnp.pad(x, [(0, 0), (0, 0), (0, args.gen), (0, 0)])
+        return x
+    cache = jax.tree_util.tree_map_with_path(grow, cache)
+    tok = jnp.asarray(last_logits.argmax(-1), jnp.int32)
+    t_prefill = time.time() - t0
+
+    out_tokens = [tok]
+    t0 = time.time()
+    for _ in range(args.gen - 1):
+        logits, cache = decode(params, cache, tok)
+        tok = jnp.asarray(logits.argmax(-1), jnp.int32)
+        out_tokens.append(tok)
+    jax.block_until_ready(tok)
+    t_decode = time.time() - t0
+
+    gen = np.stack([np.asarray(t) for t in out_tokens], 1)
+    kv_bytes = sum(
+        x.size * x.dtype.itemsize for k, x in cache.items()
+        if k in ("k", "v", "k_scale", "v_scale", "mla_lat", "mla_rope"))
+    print(f"arch={cfg.arch_id} quantized_cache={quant}")
+    print(f"prefill {args.batch}x{args.prompt_len}: {t_prefill*1e3:.0f} ms")
+    print(f"decode  {args.gen} tokens: {t_decode*1e3:.0f} ms "
+          f"({t_decode/max(1,args.gen-1)*1e3:.1f} ms/tok)")
+    print(f"cache bytes: {kv_bytes/2**20:.2f} MiB "
+          f"({'int8+scales' if quant else 'bf16'})")
+    print(f"generated (first row): {gen[0][:16].tolist()}")
+    assert np.isfinite(np.asarray(out_tokens[-1])).all()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,58 @@
+"""End-to-end LM training driver: a ~100M-param llama-style model with the
+full production stack (S-C remat, bf16 M-P, grad accumulation, AdamW,
+atomic checkpointing + resume, preemption handling, step watchdog).
+
+Scaled for this container by default (--tiny). Drop --tiny on a real host
+to train the full ~100M config for a few hundred steps:
+
+    python examples/train_llm.py [--tiny] [--steps 300]
+"""
+import argparse
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import dataclasses
+
+from repro import configs
+from repro.launch import train as launch_train
+from repro.models.config import ModelConfig
+
+
+def model_100m() -> ModelConfig:
+    # ~115M params: 12L x 768, GQA 12/4 heads, vocab 32k
+    return ModelConfig(arch_id="llama-100m", family="dense", n_layers=12,
+                       d_model=768, n_heads=12, n_kv=4, d_ff=2048,
+                       vocab=32000)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--tiny", action="store_true",
+                    help="CPU-sized variant of the 100M config")
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--ckpt-dir", default="/tmp/train_llm_ckpt")
+    args = ap.parse_args()
+
+    cfg = model_100m()
+    if args.tiny:
+        cfg = dataclasses.replace(cfg, n_layers=4, d_model=128, n_heads=4,
+                                  n_kv=2, d_ff=256, vocab=2048)
+
+    # register the config so the production launcher can resolve it
+    import repro.configs as C
+    orig = C.get_config
+    C.get_config = lambda a, _o=orig: cfg if a == cfg.arch_id else _o(a)
+
+    argv = ["--arch", cfg.arch_id, "--steps", str(args.steps),
+            "--batch", "8", "--seq", "256" if not args.tiny else "128",
+            "--accum", "2", "--policy", "bf16",
+            "--ckpt-dir", args.ckpt_dir, "--ckpt-every", "100",
+            "--log-every", "20"]
+    sys.argv = [sys.argv[0]] + argv
+    return launch_train.main()
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,6 @@
+"""OpTorch reproduction: optimized training/serving framework in JAX.
+
+Core paper features: repro.core (S-C, M-P, E-D, SBS).
+Framework: repro.models / distributed / train / checkpointing / launch.
+"""
+__version__ = "1.0.0"

@@ -1,0 +1,15 @@
+"""The paper's OWN experiment models (Figs. 8-10): ResNet-18/50 on CIFAR.
+
+These use the CNN family (``repro.models.cnn``), not the LM transformer —
+exposed here so the paper-reproduction examples and benchmarks resolve
+configs through one registry.
+"""
+from repro.models import cnn
+
+
+def resnet18(**kw) -> cnn.ResNetConfig:
+    return cnn.resnet18(**kw)
+
+
+def resnet50(**kw) -> cnn.ResNetConfig:
+    return cnn.resnet50(**kw)

@@ -1,0 +1,16 @@
+"""OpTorch core: the paper's Gradient-flow and Data-flow optimizations."""
+from repro.core.api import mp, sc, sc_mp
+from repro.core.checkpoint import (
+    CheckpointConfig,
+    checkpoint_sequential,
+    optimal_segments,
+    remat_scan,
+)
+from repro.core.mixed_precision import LossScale, Policy, get_policy, scaled_value_and_grad
+from repro.core import encoding
+
+__all__ = [
+    "mp", "sc", "sc_mp", "CheckpointConfig", "checkpoint_sequential",
+    "optimal_segments", "remat_scan", "LossScale", "Policy", "get_policy",
+    "scaled_value_and_grad", "encoding",
+]

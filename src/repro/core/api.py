@@ -1,0 +1,39 @@
+"""One-line OpTorch-style wrappers: ``scmodel = sc(model)`` etc.
+
+The paper advertises single-command composition of its pipelines; this is
+the JAX equivalent over pure apply functions.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Callable
+
+import jax
+
+from repro.core.checkpoint import CheckpointConfig, checkpoint_sequential, resolve_policy
+from repro.core.mixed_precision import Policy, get_policy
+
+
+def sc(apply_fn: Callable, *, policy: str = "full", save_names=()) -> Callable:
+    """Sequential-checkpoint a model apply function (whole-fn remat)."""
+    return jax.checkpoint(apply_fn, policy=resolve_policy(policy, tuple(save_names)))
+
+
+def mp(apply_fn: Callable, *, policy: str | Policy = "bf16") -> Callable:
+    """Mixed-precision a model apply function: params/inputs are cast to the
+    compute dtype on entry, outputs cast back to the output dtype."""
+    pol = get_policy(policy) if isinstance(policy, str) else policy
+
+    @functools.wraps(apply_fn)
+    def wrapped(params, *args, **kwargs):
+        out = apply_fn(pol.cast_to_compute(params),
+                       *pol.cast_to_compute(args), **kwargs)
+        return pol.cast_to_output(out)
+
+    return wrapped
+
+
+def sc_mp(apply_fn: Callable, *, remat_policy: str = "full",
+          mp_policy: str = "bf16") -> Callable:
+    """The paper's best FP-mixed pipeline: S-C + M-P composed."""
+    return sc(mp(apply_fn, policy=mp_policy), policy=remat_policy)

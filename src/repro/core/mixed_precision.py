@@ -1,0 +1,176 @@
+"""Mixed-precision (M-P) training — OpTorch's second Gradient-flow optimization.
+
+Paper mechanism (Fig. 3): weights are *stored* in FP16, *cast up* to FP32
+around loss/gradient computation, and updates are applied against FP32
+master weights.  On TPU the storage dtype of choice is bf16 (same exponent
+range as fp32 → no loss scaling needed); the fp16 path is kept for paper
+fidelity and ships with static & dynamic loss scaling.
+
+Pieces:
+  * ``Policy``           — (param_dtype, compute_dtype, output_dtype) triple.
+  * ``cast_to_compute``  — cast a param tree to the compute dtype at use.
+  * ``LossScale``        — static or dynamic (2x up / 2x down on non-finite).
+  * ``scaled_value_and_grad`` — drop-in value_and_grad with master-weight
+    semantics: grads are returned in fp32 regardless of storage dtype.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+_FLOAT_KINDS = ("f",)  # jnp floating kinds we cast
+
+
+def _is_float(x) -> bool:
+    return hasattr(x, "dtype") and jnp.issubdtype(x.dtype, jnp.floating)
+
+
+@dataclasses.dataclass(frozen=True)
+class Policy:
+    """Dtype policy applied around a model function."""
+
+    param_dtype: Any = jnp.float32    # storage
+    compute_dtype: Any = jnp.bfloat16  # matmuls / activations
+    output_dtype: Any = jnp.float32    # logits / loss accumulation
+
+    @staticmethod
+    def full() -> "Policy":  # the paper's "standard pipeline" (pure FP32)
+        return Policy(jnp.float32, jnp.float32, jnp.float32)
+
+    @staticmethod
+    def bf16() -> "Policy":  # TPU-native mixed precision
+        return Policy(jnp.float32, jnp.bfloat16, jnp.float32)
+
+    @staticmethod
+    def fp16() -> "Policy":  # paper-faithful FP16 storage (needs loss scale)
+        return Policy(jnp.float16, jnp.float16, jnp.float32)
+
+    @staticmethod
+    def bf16_params() -> "Policy":  # aggressive: bf16 storage too (half memory)
+        return Policy(jnp.bfloat16, jnp.bfloat16, jnp.float32)
+
+    def cast_to_compute(self, tree):
+        return jax.tree_util.tree_map(
+            lambda x: x.astype(self.compute_dtype) if _is_float(x) else x, tree
+        )
+
+    def cast_to_param(self, tree):
+        return jax.tree_util.tree_map(
+            lambda x: x.astype(self.param_dtype) if _is_float(x) else x, tree
+        )
+
+    def cast_to_output(self, tree):
+        return jax.tree_util.tree_map(
+            lambda x: x.astype(self.output_dtype) if _is_float(x) else x, tree
+        )
+
+
+def get_policy(name: str) -> Policy:
+    try:
+        return {
+            "full": Policy.full(),
+            "fp32": Policy.full(),
+            "bf16": Policy.bf16(),
+            "fp16": Policy.fp16(),
+            "bf16_params": Policy.bf16_params(),
+        }[name]
+    except KeyError:
+        raise ValueError(f"unknown mixed-precision policy {name!r}") from None
+
+
+# ---------------------------------------------------------------------------
+# Loss scaling (needed for the paper-faithful fp16 path).
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass
+class LossScale:
+    """Dynamic loss scale state (static if ``growth_interval == 0``)."""
+
+    scale: jax.Array                      # current multiplier
+    growth_counter: jax.Array             # consecutive finite steps
+    growth_interval: int = 2000           # 0 => static scaling
+    growth_factor: float = 2.0
+    backoff_factor: float = 0.5
+    max_scale: float = 2.0 ** 24
+
+    @staticmethod
+    def init(initial: float = 2.0 ** 15, growth_interval: int = 2000) -> "LossScale":
+        return LossScale(
+            scale=jnp.float32(initial),
+            growth_counter=jnp.int32(0),
+            growth_interval=growth_interval,
+        )
+
+    @staticmethod
+    def noop() -> "LossScale":
+        return LossScale(scale=jnp.float32(1.0), growth_counter=jnp.int32(0),
+                         growth_interval=0)
+
+    def scale_loss(self, loss):
+        return loss * self.scale.astype(loss.dtype)
+
+    def unscale(self, grads):
+        inv = (1.0 / self.scale).astype(jnp.float32)
+        return jax.tree_util.tree_map(lambda g: g.astype(jnp.float32) * inv, grads)
+
+    def update(self, grads_finite: jax.Array) -> "LossScale":
+        if self.growth_interval == 0:
+            return self
+        counter = jnp.where(grads_finite, self.growth_counter + 1, 0).astype(jnp.int32)
+        grow = counter >= self.growth_interval
+        new_scale = jnp.where(
+            grads_finite,
+            jnp.where(grow, jnp.minimum(self.scale * self.growth_factor, self.max_scale),
+                      self.scale),
+            jnp.maximum(self.scale * self.backoff_factor, 1.0),
+        )
+        return dataclasses.replace(
+            self, scale=new_scale, growth_counter=jnp.where(grow, 0, counter).astype(jnp.int32)
+        )
+
+
+jax.tree_util.register_dataclass(
+    LossScale,
+    data_fields=["scale", "growth_counter"],
+    meta_fields=["growth_interval", "growth_factor", "backoff_factor",
+                 "max_scale"],
+)
+
+
+def all_finite(tree) -> jax.Array:
+    leaves = [jnp.all(jnp.isfinite(x)) for x in jax.tree_util.tree_leaves(tree) if _is_float(x)]
+    if not leaves:
+        return jnp.bool_(True)
+    return jnp.stack(leaves).all()
+
+
+def scaled_value_and_grad(
+    loss_fn: Callable[..., jax.Array],
+    policy: Policy,
+    loss_scale: LossScale | None = None,
+):
+    """``value_and_grad`` with the paper's master-weight M-P semantics.
+
+    ``loss_fn(params, *args)`` is differentiated w.r.t. fp32 master params;
+    params are cast to ``policy.compute_dtype`` *inside* the diff so grads
+    come back fp32 (cast-of-constant rule), the loss is scaled/unscaled, and
+    a ``grads_finite`` flag is returned for the LossScale update / step skip.
+    """
+    def wrapped(master_params, *args):
+        def scaled_loss(p, *a):
+            loss, aux = loss_fn(policy.cast_to_compute(p), *a)
+            s = loss_scale.scale_loss(loss) if loss_scale is not None else loss
+            return s.astype(jnp.float32), aux
+
+        (loss, aux), grads = jax.value_and_grad(scaled_loss, has_aux=True)(
+            master_params, *args
+        )
+        if loss_scale is not None:
+            grads = loss_scale.unscale(grads)
+            loss = loss / loss_scale.scale
+        finite = all_finite(grads)
+        return (loss, aux), grads, finite
+
+    return wrapped

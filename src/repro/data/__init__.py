@@ -1,0 +1,4 @@
+from repro.data.pipeline import LoaderState, ParallelEncodedLoader
+from repro.data.synthetic import make_cifar_like, token_stream
+
+__all__ = ["LoaderState", "ParallelEncodedLoader", "make_cifar_like", "token_stream"]

@@ -1,0 +1,1 @@
+from repro.distributed import sharding, collectives

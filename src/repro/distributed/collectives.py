@@ -1,0 +1,77 @@
+"""Explicit collectives built on shard_map: compressed DP all-reduce and
+sequence-parallel decode attention (flash-combine across the model axis).
+
+The pjit training path leaves gradient reduction to XLA; these are the
+hand-rolled equivalents for (a) gradient compression over slow cross-pod
+links, (b) serving long contexts with the KV sequence dim sharded.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax.experimental.shard_map import shard_map
+
+
+def compressed_psum_grads(grads, mesh: Mesh, axis: str | tuple, key,
+                          *, codec: str = "int8"):
+    """All-reduce ``grads`` over the DP axis with int8 payloads.
+
+    Each device quantizes its local shard-grads to int8, the psum runs on
+    the *dequantized* values (XLA reduces fp32; on real interconnect the
+    int8 payload is what crosses links — we account bytes, not wire format,
+    see benchmarks/bench_compression.py), and the result is rescaled.
+    Stochastic rounding keeps the estimate unbiased.
+    """
+    from repro.optim import compression
+
+    axes = (axis,) if isinstance(axis, str) else tuple(axis)
+
+    def local_reduce(g):
+        def per_leaf(x, k):
+            q, s = compression.quantize_int8(x, k)
+            deq = compression.dequantize_int8(q, s)
+            return jax.lax.psum(deq, axes)
+
+        leaves, treedef = jax.tree_util.tree_flatten(g)
+        keys = jax.random.split(key, len(leaves))
+        return treedef.unflatten(
+            [per_leaf(x, k) for x, k in zip(leaves, keys)])
+
+    spec = jax.tree_util.tree_map(lambda _: P(), grads)
+    return shard_map(local_reduce, mesh=mesh, in_specs=(spec,),
+                     out_specs=spec, check_rep=False)(grads)
+
+
+def sp_decode_attention(q, k_cache, v_cache, bias, mesh: Mesh, *,
+                        sm_scale: float, seq_axis: str = "model"):
+    """Decode attention with the KV sequence dim sharded over ``seq_axis``.
+
+    Each shard computes local flash statistics (m_i, l_i, o_i); a psum-style
+    renormalization combines them — one small collective instead of
+    all-gathering the cache:
+      m = max_i m_i;  l = sum_i l_i e^{m_i - m};  o = sum_i o_i l_i e^{m_i-m} / l
+    q: (B, H, D); k/v_cache: (B, H, S, D); bias: (B, S).
+    """
+    def local(q_l, k_l, v_l, b_l):
+        logits = jnp.einsum("bhd,bhsd->bhs", q_l.astype(jnp.float32),
+                            k_l.astype(jnp.float32)) * sm_scale
+        logits = logits + b_l[:, None, :]
+        m_i = logits.max(-1)                                   # (B, H)
+        p = jnp.exp(logits - m_i[..., None])
+        l_i = p.sum(-1)
+        o_i = jnp.einsum("bhs,bhsd->bhd", p, v_l.astype(jnp.float32))
+        m = jax.lax.pmax(m_i, seq_axis)
+        corr = jnp.exp(m_i - m)
+        l = jax.lax.psum(l_i * corr, seq_axis)
+        o = jax.lax.psum(o_i * corr[..., None], seq_axis)
+        return (o / jnp.maximum(l, 1e-30)[..., None]).astype(q_l.dtype)
+
+    return shard_map(
+        local, mesh=mesh,
+        in_specs=(P(), P(None, None, seq_axis, None),
+                  P(None, None, seq_axis, None), P(None, seq_axis)),
+        out_specs=P(), check_rep=False)(q, k_cache, v_cache, bias)

@@ -1,0 +1,135 @@
+"""Sharding rules: parameter, activation, and cache PartitionSpecs.
+
+Mesh axes: ``("pod", "data", "model")`` multi-pod or ``("data", "model")``
+single-pod.  DP runs over (pod, data); TP over model.  Rules are name-based
+over the param tree:
+
+  * last-dim "model"      : wq wk wv w_gate w_up q_b kv_b w1 b1 shared_* lm_head
+  * penultimate "model"   : wo w_down w2 shared_down embed
+  * MoE EP mode           : experts sharded on the expert axis instead
+  * SSM params            : replicated (small; heads rarely divide 16 —
+                            DESIGN.md §5 records this choice)
+
+Caches shard batch over DP when divisible, KV-heads over model when
+divisible, otherwise the *sequence* dim over model (long-context serving).
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.models.config import ModelConfig
+
+_LAST = {"wq", "wk", "wv", "w_gate", "w_up", "q_b", "kv_b", "w1", "b1",
+         "shared_gate", "shared_up", "lm_head"}
+_PENULT = {"wo", "w_down", "w2", "shared_down", "embed"}
+
+
+def dp_axes(mesh: Mesh):
+    return ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+
+
+def dp_size(mesh: Mesh) -> int:
+    s = 1
+    for a in dp_axes(mesh):
+        s *= mesh.shape[a]
+    return s
+
+
+def _path_names(path) -> list[str]:
+    names = []
+    for p in path:
+        if isinstance(p, jax.tree_util.DictKey):
+            names.append(str(p.key))
+        elif isinstance(p, jax.tree_util.SequenceKey):
+            names.append(str(p.idx))
+    return names
+
+
+def param_specs(cfg: ModelConfig | None, params_shape) -> Any:
+    """PartitionSpec tree matching ``params_shape`` (shapes or arrays)."""
+    ep = cfg is not None and cfg.moe is not None and cfg.moe.expert_mode == "ep"
+
+    def spec_for(path, leaf):
+        names = _path_names(path)
+        name = names[-1]
+        nd = len(leaf.shape)
+        in_ssm = "ssm" in names
+        if in_ssm:
+            return P()
+        if ep and name in ("w_gate", "w_up", "w_down") and nd == 4:
+            return P(None, "model", None, None)      # experts over model
+        if name in _LAST and nd >= 1:
+            return P(*([None] * (nd - 1) + ["model"]))
+        if name in _PENULT and nd >= 2:
+            return P(*([None] * (nd - 2) + ["model", None]))
+        return P()
+
+    return jax.tree_util.tree_map_with_path(spec_for, params_shape)
+
+
+def batch_specs(cfg: ModelConfig, batch_shape, mesh: Mesh) -> Any:
+    """Input-batch specs: leading batch dim over DP (positions: dim 1)."""
+    dp = dp_axes(mesh)
+
+    def spec_for(path, leaf):
+        name = _path_names(path)[-1]
+        nd = len(leaf.shape)
+        if name == "positions" and nd == 3:          # (3, B, S) M-RoPE
+            return P(None, dp, None)
+        return P(*([dp] + [None] * (nd - 1)))
+
+    return jax.tree_util.tree_map_with_path(spec_for, batch_shape)
+
+
+def cache_specs(cfg: ModelConfig, cache_shape, mesh: Mesh) -> Any:
+    """Decode-cache specs (see module docstring for the policy)."""
+    dp = dp_axes(mesh)
+    n_dp = dp_size(mesh)
+    n_model = mesh.shape["model"]
+
+    def spec_for(path, leaf):
+        name = _path_names(path)[-1]
+        shape = leaf.shape
+        if name == "pos":
+            return P()
+        b = shape[1] if len(shape) > 1 else 0
+        b_ax = dp if (b and b % n_dp == 0) else None
+        if name in ("k", "v", "gk", "gv", "wk", "wv"):   # (L, B, Hkv, S, hd)
+            hkv, s = shape[2], shape[3]
+            if hkv % n_model == 0:
+                return P(None, b_ax, "model", None, None)
+            seq_ax = ("data", "model") if b_ax is None else "model"
+            n_seq = n_model if b_ax is not None else (
+                n_dp * n_model // mesh.shape.get("pod", 1))
+            if s % n_seq:                # rolling window buffers stay local
+                seq_ax = None
+            return P(None, b_ax, None, seq_ax, None)
+        if name in ("k_scale", "v_scale", "gk_scale", "gv_scale",
+                    "wk_scale", "wv_scale"):             # (L, B, Hkv, S)
+            hkv, s = shape[2], shape[3]
+            if hkv % n_model == 0:
+                return P(None, b_ax, "model", None)
+            seq_ax = ("data", "model") if b_ax is None else "model"
+            n_seq = n_model if b_ax is not None else (
+                n_dp * n_model // mesh.shape.get("pod", 1))
+            if s % n_seq:
+                seq_ax = None
+            return P(None, b_ax, None, seq_ax)
+        if name in ("mla_lat", "mla_rope"):          # (L, B, S, r)
+            seq_ax = ("data", "model") if b_ax is None else "model"
+            return P(None, b_ax, seq_ax, None)
+        if name in ("ssm", "conv"):                  # small states: DP only
+            return P(None, b_ax)
+        return P()
+
+    return jax.tree_util.tree_map_with_path(spec_for, cache_shape)
+
+
+def to_shardings(mesh: Mesh, spec_tree):
+    return jax.tree_util.tree_map(
+        lambda s: NamedSharding(mesh, s), spec_tree,
+        is_leaf=lambda x: isinstance(x, P))

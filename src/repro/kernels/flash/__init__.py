@@ -1,0 +1,1 @@
+from repro.kernels.flash import ops, ref  # noqa: F401

@@ -1,0 +1,28 @@
+"""Public flash-attention op: (B, H, S, D) GQA layout, backend dispatch."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash import kernel, ref
+
+
+def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
+                    sm_scale: float | None = None, backend: str = "ref"):
+    """q: (B, H, S, D); k, v: (B, Hkv, S, D) -> (B, H, S, D)."""
+    if backend == "ref":
+        return ref.flash_ref(q, k, v, causal=causal, window=window,
+                             sm_scale=sm_scale)
+    b, h, s, d = q.shape
+    hkv = k.shape[1]
+    pad = (-s) % 128 if s > 128 else (-s) % 8
+    if pad:
+        q = jnp.pad(q, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, pad), (0, 0)))
+    out = kernel.flash_attention_pallas(
+        q.reshape(b * h, s + pad, d), k.reshape(b * hkv, s + pad, d),
+        v.reshape(b * hkv, s + pad, d), causal=causal, window=window,
+        sm_scale=sm_scale, interpret=(backend == "interpret"))
+    out = out.reshape(b, h, s + pad, d)
+    return out[:, :, :s] if pad else out

@@ -1,0 +1,29 @@
+"""Oracle for the flash-attention prefill kernel: exact GQA softmax."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def flash_ref(q, k, v, *, causal: bool = True, window: int = 0,
+              sm_scale: float | None = None):
+    """q: (B, H, S, D); k, v: (B, Hkv, S, D) -> (B, H, S, D), f32 math."""
+    b, h, s, d = q.shape
+    hkv = k.shape[1]
+    g = h // hkv
+    scale = sm_scale if sm_scale is not None else d ** -0.5
+    qg = q.reshape(b, hkv, g, s, d).astype(jnp.float32)
+    logits = jnp.einsum("bhgqd,bhkd->bhgqk", qg,
+                        k.astype(jnp.float32)) * scale
+    if causal:
+        qpos = jnp.arange(s)[:, None]
+        kpos = jnp.arange(s)[None, :]
+        ok = qpos >= kpos
+        if window > 0:
+            ok &= (qpos - kpos) < window
+        logits = jnp.where(ok[None, None, None], logits, NEG_INF)
+    p = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhgqk,bhkd->bhgqd", p, v.astype(jnp.float32))
+    return out.reshape(b, h, s, d).astype(q.dtype)

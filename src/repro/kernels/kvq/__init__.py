@@ -1,0 +1,1 @@
+from repro.kernels.kvq import ops, ref  # noqa: F401

@@ -1,0 +1,95 @@
+"""Pallas flash-decode over an int8-quantized KV cache.
+
+One grid step processes one (batch, kv-head) pair and one KV-chunk of BS
+tokens, with the classic online-softmax recurrence kept in VMEM scratch.
+The int8->f32 dequant happens *after* the chunk is resident in VMEM, so HBM
+sees only 1 byte/elem + 4 B/token scales — the paper's store-encoded /
+decode-on-read trade applied to the decode-latency-dominant stream.
+
+VMEM per step (BS=512, D<=128, G<=32):
+  K,V chunks int8: 2*BS*D      = 128 KiB
+  dequant f32:     2*BS*D*4    = 512 KiB
+  scratch acc:     G*D*4       <= 16 KiB         (fits VMEM with headroom)
+
+MXU shapes: (G, D) x (D, BS) and (G, BS) x (BS, D); D=64..128, BS multiple
+of 128 lanes.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BS = 512
+NEG_INF = -1e30
+
+
+def _flash_decode_kernel(q_ref, kq_ref, ks_ref, vq_ref, vs_ref, bias_ref,
+                         o_ref, m_ref, l_ref, acc_ref, *, sm_scale, ns):
+    s = pl.program_id(2)
+
+    @pl.when(s == 0)
+    def _init():
+        m_ref[...] = jnp.full(m_ref.shape, NEG_INF, jnp.float32)
+        l_ref[...] = jnp.zeros(l_ref.shape, jnp.float32)
+        acc_ref[...] = jnp.zeros(acc_ref.shape, jnp.float32)
+
+    q = q_ref[...][0, 0].astype(jnp.float32)                     # (G, D)
+    k = kq_ref[...][0, 0].astype(jnp.float32) * ks_ref[...][0, 0][:, None]
+    v = vq_ref[...][0, 0].astype(jnp.float32) * vs_ref[...][0, 0][:, None]
+    logits = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * sm_scale
+    logits = logits + bias_ref[...][0][None, :]                   # (G, BS)
+
+    m_prev = m_ref[...]
+    m_new = jnp.maximum(m_prev, logits.max(axis=-1))
+    alpha = jnp.exp(m_prev - m_new)
+    p = jnp.exp(logits - m_new[:, None])
+    acc_ref[...] = acc_ref[...] * alpha[:, None] + jnp.dot(
+        p, v, preferred_element_type=jnp.float32)
+    l_ref[...] = l_ref[...] * alpha + p.sum(axis=-1)
+    m_ref[...] = m_new
+
+    @pl.when(s == ns - 1)
+    def _finish():
+        denom = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[...] = (acc_ref[...] / denom[:, None])[None, None].astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("sm_scale", "block_s", "interpret"))
+def flash_decode_pallas(q, k_q, k_s, v_q, v_s, bias, *, sm_scale: float,
+                        block_s: int = DEFAULT_BS, interpret: bool = False):
+    """Shapes as in ref.decode_attention_ref; S % block_s == 0."""
+    b, hkv, g, d = q.shape
+    s = k_q.shape[2]
+    bs = min(block_s, s)
+    while s % bs:                      # largest power-of-two-ish divisor
+        bs //= 2
+    assert bs >= 1, (s, block_s)
+    ns = s // bs
+    grid = (b, hkv, ns)
+    kv_spec = pl.BlockSpec((1, 1, bs, d), lambda i, j, k: (i, j, k, 0))
+    sc_spec = pl.BlockSpec((1, 1, bs), lambda i, j, k: (i, j, k))
+    return pl.pallas_call(
+        functools.partial(_flash_decode_kernel, sm_scale=sm_scale, ns=ns),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, g, d), lambda i, j, k: (i, j, 0, 0)),  # q
+            kv_spec, sc_spec, kv_spec, sc_spec,                         # k, v
+            pl.BlockSpec((1, bs), lambda i, j, k: (i, k)),              # bias
+        ],
+        out_specs=pl.BlockSpec((1, 1, g, d), lambda i, j, k: (i, j, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, hkv, g, d), q.dtype),
+        scratch_shapes=[
+            _vmem((g,), jnp.float32),                                    # m
+            _vmem((g,), jnp.float32),                                    # l
+            _vmem((g, d), jnp.float32),                                  # acc
+        ],
+        interpret=interpret,
+    )(q, k_q, k_s, v_q, v_s, bias)
+
+
+def _vmem(shape, dtype):
+    from jax.experimental.pallas import tpu as pltpu
+    return pltpu.VMEM(shape, dtype)

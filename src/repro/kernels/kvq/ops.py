@@ -1,0 +1,42 @@
+"""Public op: GQA decode attention over an int8 KV cache.
+
+``decode_attention`` accepts the *deployed* layout — query heads flat,
+cache pre-quantized — reshapes to the kernel's grouped layout, and
+dispatches pallas / interpret / ref.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.kvq import kernel, ref
+from repro.kernels.kvq.ref import dequantize_kv, quantize_kv  # re-export
+
+
+def decode_attention(q, k_q, k_s, v_q, v_s, *, lengths=None, bias=None,
+                     sm_scale: float | None = None, backend: str = "ref"):
+    """q: (B, H, D); cache: (B, Hkv, S, D) int8 (+ (B, Hkv, S) scales).
+
+    lengths: (B,) valid cache lengths -> padding mask; or explicit bias (B,S).
+    Returns (B, H, D) f32.
+    """
+    b, h, d = q.shape
+    _, hkv, s, _ = k_q.shape
+    assert h % hkv == 0, (h, hkv)
+    g = h // hkv
+    sm = sm_scale if sm_scale is not None else d ** -0.5
+    if bias is None:
+        if lengths is None:
+            bias = jnp.zeros((b, s), jnp.float32)
+        else:
+            pos = jnp.arange(s)[None, :]
+            bias = jnp.where(pos < lengths[:, None], 0.0, kernel.NEG_INF
+                             ).astype(jnp.float32)
+    qg = q.astype(jnp.float32).reshape(b, hkv, g, d)
+    if backend == "ref":
+        out = ref.decode_attention_ref(qg, k_q, k_s, v_q, v_s, bias, sm)
+    else:
+        out = kernel.flash_decode_pallas(qg, k_q, k_s, v_q, v_s, bias,
+                                         sm_scale=sm,
+                                         interpret=(backend == "interpret"))
+    return out.reshape(b, h, d)

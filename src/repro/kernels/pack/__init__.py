@@ -1,0 +1,1 @@
+from repro.kernels.pack import ops, ref  # noqa: F401

@@ -1,0 +1,76 @@
+"""Public E-D codec ops: shape-polymorphic wrappers with backend dispatch.
+
+``decode(packed, out_batch)`` is the network's input adapter (the paper's
+"custom deep learning layer to decode each input matrix").  Dispatch:
+
+  backend='pallas'     compiled TPU kernel
+  backend='interpret'  Pallas interpret mode (CPU tests)
+  backend='ref'        pure jnp (dry-run lowering; numerically identical)
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.pack import kernel, ref
+from repro.kernels.pack.ref import LANES
+
+
+def _to_2d(x: jax.Array, bc: int):
+    """Flatten to (R, C) with C a multiple of 128 and R of 8; pad with zeros."""
+    flat = x.reshape(-1)
+    c = min(bc, max(128, 1 << (len(flat) - 1).bit_length() // 2))
+    c = max(128, (c // 128) * 128)
+    r = -(-flat.size // c)
+    r_pad = -(-r // 8) * 8
+    pad = r_pad * c - flat.size
+    flat = jnp.pad(flat, (0, pad))
+    return flat.reshape(r_pad, c), pad
+
+
+def decode(packed: jax.Array, *, scale: float = 1.0 / 255.0, shift: float = 0.0,
+           backend: str = "ref") -> jax.Array:
+    """uint32 (M, ...) -> float32 (4*M, ...): unpack + normalize.
+
+    The leading axis is the container axis (container j holds images
+    4j..4j+3), matching ``repro.core.encoding.pack_u8_to_u32``.
+    """
+    if packed.dtype != jnp.uint32:
+        raise TypeError(f"decode expects uint32, got {packed.dtype}")
+    m = packed.shape[0]
+    rest = packed.shape[1:]
+    if backend == "ref":
+        lanes = ref.decode_ref(packed.reshape(m, -1), scale, shift)
+    else:
+        x2d, pad = _to_2d(packed, kernel.DEFAULT_BC)
+        out = kernel.decode_pallas(
+            x2d, scale=scale, shift=shift, interpret=(backend == "interpret")
+        )
+        flat = out.reshape(LANES, -1)
+        flat = flat[:, : flat.shape[1] - pad] if pad else flat
+        lanes = flat.reshape(LANES, m, -1)
+    # (4, M, prod(rest)) -> (4*M, ...): image i = container i//4, lane i%4
+    out = jnp.swapaxes(lanes, 0, 1).reshape((LANES * m,) + rest)
+    return out
+
+
+def encode(images_u8: jax.Array, *, backend: str = "ref") -> jax.Array:
+    """uint8 (N, ...) with N%4==0 -> uint32 (N//4, ...)."""
+    if images_u8.dtype != jnp.uint8:
+        raise TypeError(f"encode expects uint8, got {images_u8.dtype}")
+    n = images_u8.shape[0]
+    rest = images_u8.shape[1:]
+    lanes = images_u8.reshape((n // LANES, LANES) + rest)
+    lanes = jnp.swapaxes(lanes, 0, 1).reshape(LANES, n // LANES, -1)
+    if backend == "ref":
+        out = ref.encode_ref(lanes.reshape(LANES, -1)[:, None, :]
+                             ).reshape(n // LANES, -1)
+    else:
+        x2d = lanes.reshape(LANES, -1)
+        pad_src, pad = _to_2d(x2d[0], kernel.DEFAULT_BC)
+        stacked = jnp.stack([_to_2d(x2d[i], kernel.DEFAULT_BC)[0] for i in range(LANES)])
+        out2d = kernel.encode_pallas(stacked, interpret=(backend == "interpret"))
+        flat = out2d.reshape(-1)
+        flat = flat[: flat.size - pad] if pad else flat
+        out = flat.reshape(n // LANES, -1)
+    return out.reshape((n // LANES,) + rest)

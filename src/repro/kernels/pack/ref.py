@@ -1,0 +1,20 @@
+"""Pure-jnp oracle for the E-D codec kernels (paper Alg. 1/3, u32 form)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+LANES = 4  # u8 images per u32 container
+
+
+def decode_ref(packed: jnp.ndarray, scale: float = 1.0 / 255.0,
+               shift: float = 0.0) -> jnp.ndarray:
+    """(R, C) uint32 -> (LANES, R, C) float32, decode + normalize fused."""
+    shifts = (jnp.arange(LANES, dtype=jnp.uint32) * 8)[:, None, None]
+    lanes = (packed[None] >> shifts) & jnp.uint32(0xFF)
+    return lanes.astype(jnp.float32) * scale + shift
+
+
+def encode_ref(lanes_u8: jnp.ndarray) -> jnp.ndarray:
+    """(LANES, R, C) uint8 -> (R, C) uint32."""
+    shifts = (jnp.arange(LANES, dtype=jnp.uint32) * 8)[:, None, None]
+    return (lanes_u8.astype(jnp.uint32) << shifts).sum(0).astype(jnp.uint32)

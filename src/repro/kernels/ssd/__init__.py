@@ -1,0 +1,1 @@
+from repro.kernels.ssd import ops, ref  # noqa: F401

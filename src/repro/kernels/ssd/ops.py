@@ -1,0 +1,85 @@
+"""Public SSD op: full chunked scan with kernel/ref/interpret dispatch.
+
+``ssd`` runs the mamba2 sequence mixer: the FLOPs-heavy intra-chunk part
+goes through the Pallas kernel (or its jnp oracle), the tiny inter-chunk
+state recurrence through a lax.scan.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.ssd import kernel, ref
+
+
+def ssd(x, dt, a, b, c, d, *, chunk: int = 128, backend: str = "ref",
+        initial_state=None, return_state: bool = False):
+    """Chunked SSD.
+
+    x: (B, L, H, P); dt: (B, L, H) (>=0); a: (H,) negative log-decay rates;
+    b, c: (B, L, N); d: (H,) skip.  L % chunk == 0.
+    Returns y (B, L, H, P) [, final_state (B, H, N, P)].
+    """
+    bsz, L, h, p = x.shape
+    n = b.shape[-1]
+    assert L % chunk == 0, (L, chunk)
+    t = L // chunk
+
+    dtype = jnp.float32  # state recurrences are precision-critical
+    xbar = (x * dt[..., None]).astype(dtype)
+    alog = (dt * a[None, None, :]).astype(dtype)                    # (B, L, H)
+    acum = jnp.cumsum(alog.reshape(bsz, t, chunk, h), axis=2)       # (B,T,Q,H)
+
+    # fold (B, H) -> G for the kernel; B/C are head-shared (1 group)
+    def fold(z, feat):  # (B, L, F) -> (B*H, T, Q, F) broadcast over heads
+        z = z.reshape(bsz, 1, t, chunk, feat).astype(dtype)
+        return jnp.broadcast_to(z, (bsz, h, t, chunk, feat)).reshape(
+            bsz * h, t, chunk, feat)
+
+    c_f = fold(c, n)
+    b_f = fold(b, n)
+    x_f = jnp.moveaxis(xbar.reshape(bsz, t, chunk, h, p), 3, 1).reshape(
+        bsz * h, t, chunk, p)
+    a_f = jnp.moveaxis(acum, 3, 1).reshape(bsz * h, t, chunk)
+
+    if backend == "ref":
+        y_intra, chunk_states = ref.ssd_chunk_ref(c_f, b_f, x_f, a_f)
+    else:
+        y_intra, chunk_states = kernel.ssd_chunk_pallas(
+            c_f, b_f, x_f, a_f, interpret=(backend == "interpret"))
+
+    # inter-chunk state recurrence: S_{j+1} = exp(sum_j) S_j + state_j
+    chunk_decay = jnp.exp(a_f[:, :, -1])                            # (G, T)
+    s0 = (jnp.zeros((bsz * h, n, p), dtype) if initial_state is None
+          else initial_state.reshape(bsz * h, n, p).astype(dtype))
+
+    def step(s, inp):
+        dec, st = inp
+        return s * dec[:, None, None] + st, s  # emit state *entering* chunk
+
+    final_state, s_in = jax.lax.scan(
+        step, s0, (jnp.moveaxis(chunk_decay, 1, 0),
+                   jnp.moveaxis(chunk_states, 1, 0)))
+    s_in = jnp.moveaxis(s_in, 0, 1)                                 # (G, T, N, P)
+
+    y_inter = jnp.einsum("gtqn,gtnp->gtqp", c_f * jnp.exp(a_f)[..., None], s_in)
+    y = (y_intra + y_inter).reshape(bsz, h, t, chunk, p)
+    y = jnp.moveaxis(y, 1, 3).reshape(bsz, L, h, p)
+    y = y + x.astype(dtype) * d[None, None, :, None]
+    y = y.astype(x.dtype)
+    if return_state:
+        return y, final_state.reshape(bsz, h, n, p)
+    return y
+
+
+def ssd_decode_step(state, x_t, dt_t, a, b_t, c_t, d):
+    """Single-token recurrent step for serving.
+
+    state: (B, H, N, P); x_t: (B, H, P); dt_t: (B, H); b_t, c_t: (B, N).
+    Returns (new_state, y_t (B, H, P)).
+    """
+    da = jnp.exp(dt_t * a[None, :])[..., None, None]                # (B,H,1,1)
+    xbar = x_t * dt_t[..., None]
+    state = state * da + jnp.einsum("bn,bhp->bhnp", b_t, xbar)
+    y = jnp.einsum("bn,bhnp->bhp", c_t, state) + x_t * d[None, :, None]
+    return state, y

@@ -1,0 +1,61 @@
+"""Pure-jnp oracle for the SSD (state-space duality) chunk kernel.
+
+Mamba-2 SSD semantics, per head: with per-step log-decay a_t = dt_t * A and
+inclusive cumsum Acum, the sequence output is
+
+  h_t = exp(a_t) h_{t-1} + B_t xbar_t ;   y_t = C_t^T h_t + D x_t
+
+The chunked form splits L into chunks of Q and computes, per chunk,
+  intra  : y_t += sum_{s<=t} (C_t.B_s) exp(Acum_t - Acum_s) xbar_s
+  state  : S'   = exp(Acum_Q) S + sum_s exp(Acum_Q - Acum_s) B_s^T xbar_s
+  inter  : y_t += exp(Acum_t) (C_t @ S)
+
+``ssd_chunk_ref`` covers the intra + state terms (what the Pallas kernel
+fuses); ``ssd_scan_ref`` is the full O(L) recurrence oracle.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def ssd_chunk_ref(c, b, xbar, acum):
+    """c,b: (G, T, Q, N); xbar: (G, T, Q, P); acum: (G, T, Q) inclusive cumsum.
+
+    Returns (y_intra (G,T,Q,P), chunk_state (G,T,N,P)).
+    G folds batch*heads; T = number of chunks.
+    """
+    q = c.shape[-2]
+    scores = jnp.einsum("gtqn,gtsn->gtqs", c, b)
+    decay = jnp.exp(acum[..., :, None] - acum[..., None, :])           # (G,T,Q,Q)
+    mask = jnp.tril(jnp.ones((q, q), bool))
+    g = jnp.where(mask, scores * decay, 0.0)
+    y_intra = jnp.einsum("gtqs,gtsp->gtqp", g, xbar)
+    w = jnp.exp(acum[..., -1:] - acum)                                 # (G,T,Q)
+    state = jnp.einsum("gtqn,gtqp->gtnp", b * w[..., None], xbar)
+    return y_intra, state
+
+
+def ssd_scan_ref(x, dt, a, b, c, d):
+    """Exact sequential recurrence (the ground-truth oracle).
+
+    x: (B, L, H, P); dt: (B, L, H); a: (H,) (negative);
+    b, c: (B, L, N); d: (H,).  Returns y: (B, L, H, P).
+    """
+    bsz, L, h, p = x.shape
+    n = b.shape[-1]
+    da = jnp.exp(dt * a[None, None, :])                    # (B, L, H)
+    xbar = x * dt[..., None]
+
+    def step(s, inp):
+        da_t, xb_t, b_t, c_t = inp                         # (B,H) (B,H,P) (B,N) (B,N)
+        s = s * da_t[..., None, None] + jnp.einsum("bn,bhp->bhnp", b_t, xb_t)
+        y = jnp.einsum("bn,bhnp->bhp", c_t, s)
+        return s, y
+
+    s0 = jnp.zeros((bsz, h, n, p), x.dtype)
+    xs = (jnp.moveaxis(da, 1, 0), jnp.moveaxis(xbar, 1, 0),
+          jnp.moveaxis(b, 1, 0), jnp.moveaxis(c, 1, 0))
+    _, ys = jax.lax.scan(step, s0, xs)
+    y = jnp.moveaxis(ys, 0, 1)                             # (B, L, H, P)
+    return y + x * d[None, None, :, None]

@@ -1,0 +1,327 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                           + " --xla_force_host_platform_device_count=512").strip()
+
+"""Multi-pod dry-run: lower + compile every (arch x shape) cell on the
+production mesh and extract the roofline terms from the compiled artifact.
+
+No arrays are ever allocated: inputs are ShapeDtypeStructs, params are
+eval_shape trees.  This proves the distribution config is coherent (sharding
+propagates, collectives legal, memory fits) for 16x16 and 2x16x16 meshes.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch llama3-8b --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod] [--json out.json]
+"""
+import argparse
+import json
+import re
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro import configs
+from repro.launch.mesh import make_production_mesh, describe
+
+# TPU v5e hardware constants (per chip)
+PEAK_FLOPS = 197e12          # bf16
+HBM_BW = 819e9               # bytes/s
+ICI_BW = 50e9                # bytes/s/link
+
+_COLL_OPS = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+             "collective-permute")
+_OP_RE = re.compile(
+    r"=\s*(.*?)\s+(all-gather|all-reduce|reduce-scatter|all-to-all|"
+    r"collective-permute)(-start|-done)?\(")
+_SHAPE_RE = re.compile(r"(f64|f32|bf16|f16|s64|u64|s32|u32|s16|u16|s8|u8|pred)"
+                       r"\[([0-9,]*)\]")
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "bf16": 2, "f16": 2, "s64": 8, "u64": 8,
+    "s32": 4, "u32": 4, "s16": 2, "u16": 2, "s8": 1, "u8": 1, "pred": 1,
+}
+
+
+def collective_bytes(hlo_text: str) -> dict:
+    """Sum per-device *output* bytes of every collective op in the SPMD HLO.
+
+    Handles scalar and tuple-shaped collectives; `-start` ops are counted,
+    their `-done` halves skipped (same transfer).
+
+    CPU-widening correction: the CPU backend has no bf16 arithmetic, so it
+    wraps bf16 collectives in convert(bf16->f32) — the HLO shows f32 at 2x
+    the bytes that would cross TPU links.  Collectives whose operands are
+    convert fusions are therefore counted at half width (recorded
+    separately under ``<op>_widened``).
+    """
+    totals: dict[str, float] = {}
+    for line in hlo_text.splitlines():
+        m = _OP_RE.search(line)
+        if not m or m.group(3) == "-done":
+            continue
+        op = m.group(2)
+        size = 0
+        for dt, dims in _SHAPE_RE.findall(m.group(1)):
+            n = 1
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+            size += n * _DTYPE_BYTES[dt]
+        args = line.split("(", 1)[1] if "(" in line else ""
+        if "convert" in args and " f32[" in f" {line.split('=',1)[1]}":
+            size //= 2
+            totals[op + "_widened"] = totals.get(op + "_widened", 0) + size
+        totals[op] = totals.get(op, 0) + size
+    totals["total"] = sum(v for k, v in totals.items()
+                          if not k.endswith("_widened"))
+    return totals
+
+
+def build_lowerable(cfg, shape_name: str, mesh, *, accum: int = 4,
+                    scan_unroll: int = 1):
+    """Returns (jitted_fn, kwargs-of-ShapeDtypeStructs) for the cell."""
+    from repro.models import transformer
+    from repro.train.train_step import TrainConfig, make_train_step
+    from repro.train.serve_step import make_serve_steps
+    from repro.optim import adamw
+    from repro.core.mixed_precision import LossScale
+
+    kind = configs.SHAPES[shape_name]["kind"]
+    specs = configs.input_specs(cfg, shape_name)
+    params_sds = jax.eval_shape(
+        lambda: transformer.init_params(cfg, jax.random.PRNGKey(0)))
+
+    if kind == "train":
+        tc = TrainConfig(policy="bf16", accum=accum, scan_unroll=scan_unroll)
+        step, _ = make_train_step(cfg, mesh, tc, specs, donate=True)
+        opt_sds = jax.eval_shape(adamw.init, params_sds)
+        ls = LossScale.noop()
+        ls_sds = jax.tree_util.tree_map(
+            lambda x: jax.ShapeDtypeStruct(jnp.shape(x), x.dtype), ls)
+        return step, (params_sds, opt_sds, ls_sds, specs)
+
+    if kind == "prefill":
+        step, _ = make_serve_steps(cfg, mesh, specs, kind="prefill",
+                                   scan_unroll=scan_unroll)
+        return step, (params_sds, specs)
+
+    step, _ = make_serve_steps(cfg, mesh, specs, kind="decode", donate=False,
+                               scan_unroll=scan_unroll)
+    args = [params_sds, specs["cache"], specs["tokens_t"]]
+    if cfg.encoder is not None:
+        args.append(specs["enc_out"])
+    return step, tuple(args)
+
+
+def _compile_cell(cfg, shape_name, mesh, *, accum=4, scan_unroll=1):
+    fn, args = build_lowerable(cfg, shape_name, mesh, accum=accum,
+                               scan_unroll=scan_unroll)
+    with mesh:
+        lowered = fn.lower(*args)
+        compiled = lowered.compile()
+    return compiled
+
+
+def _costs(compiled) -> dict:
+    cost = compiled.cost_analysis()
+    coll = collective_bytes(compiled.as_text())
+    return {
+        "flops": float(cost.get("flops", 0.0)),
+        "bytes": float(cost.get("bytes accessed", 0.0)),
+        "coll": coll["total"],
+        "coll_by_op": coll,
+    }
+
+
+def _memory_floor_bytes(cfg, shape_name: str, mesh, accum: int) -> float:
+    """Analytic per-device HBM-traffic floor for one step (bytes).
+
+    Counts only unavoidable streams: parameter reads (fwd/bwd/remat x
+    microbatches), optimizer state read+write, checkpointed activations
+    write+read, logit stream, and (serving) the KV-cache read.  Fusable
+    element-wise traffic is deliberately excluded -> a true lower bound.
+    """
+    sh = configs.SHAPES[shape_name]
+    kind = sh["kind"]
+    n_model = mesh.shape["model"]
+    n_dp = mesh.size // n_model
+    p_dev = cfg.param_count() / n_model          # params per device (approx)
+
+    if kind == "train":
+        ub_local = max(1, sh["batch"] // (n_dp * accum))
+        param_stream = 3 * 2 * p_dev * accum         # fwd+bwd+remat, bf16
+        opt_stream = 10 * 4 * p_dev                  # p,m,v read+write f32 + grads
+        ckpt = 2 * cfg.n_layers * ub_local * sh["seq"] * cfg.d_model * 2 * accum
+        logits = 10 * ub_local * sh["seq"] * (cfg.vocab / n_model) * accum
+        return param_stream + opt_stream + ckpt + logits
+    if kind == "prefill":
+        b_local = max(1, sh["batch"] // n_dp)
+        acts = 2 * cfg.n_layers * b_local * sh["seq"] * cfg.d_model * 2
+        cache = _cache_bytes_per_device(cfg, sh["batch"], sh["seq"], mesh)
+        return 2 * p_dev + acts + cache
+    # decode: params once + cache read once
+    cache = _cache_bytes_per_device(cfg, sh["batch"], sh["seq"], mesh)
+    return 2 * p_dev + cache
+
+
+def _cache_bytes_per_device(cfg, batch: int, seq: int, mesh) -> float:
+    """int8 KV (or MLA-latent / SSM-state) cache bytes per device."""
+    n_chips = mesh.size
+    L = cfg.n_layers
+    total = 0.0
+    if cfg.mixer in ("attn", "hybrid"):
+        if cfg.mla is not None:
+            m = cfg.mla
+            total += L * batch * seq * (m.kv_lora_rank + m.qk_rope_dim) * 2
+        else:
+            total += L * batch * cfg.n_kv * seq * cfg.head_dim * 2 * 1  # int8 k+v
+            total += L * batch * cfg.n_kv * seq * 2 * 4                 # scales
+    if cfg.mixer in ("ssm", "hybrid"):
+        s = cfg.ssm
+        total += L * batch * s.heads * s.d_state * s.head_p * 4
+    # cache is sharded over every mesh axis we can use (B and Hkv/S rules);
+    # assume full spread except the pod axis for B=1 long-context
+    spread = n_chips if batch > 1 else mesh.shape["model"] * (
+        mesh.shape.get("data", 1))
+    return total / spread
+
+
+def dryrun_cell(arch: str, shape_name: str, mesh, *, verbose=True,
+                accum: int = 4) -> dict:
+    """Compile the cell at full depth (memory proof) and at L=1, L=2 to
+    loop-correct the cost terms (XLA cost_analysis counts a while-loop body
+    once; layers are homogeneous, so total = c1 + (L-1) * (c2 - c1))."""
+    import dataclasses as dc
+    cfg = configs.get_config(arch)
+    L = cfg.n_layers
+    t0 = time.time()
+    compiled = _compile_cell(cfg, shape_name, mesh, accum=accum)
+    t_compile = time.time() - t0
+    mem = compiled.memory_analysis()
+
+    # cost probes: accum=1 and fully-unrolled layer stack so every op is
+    # visible to cost_analysis (whose while-loop bodies count once)
+    c1 = _costs(_compile_cell(dc.replace(cfg, n_layers=1), shape_name, mesh,
+                              accum=1, scan_unroll=1))
+    c2 = _costs(_compile_cell(dc.replace(cfg, n_layers=2), shape_name, mesh,
+                              accum=1, scan_unroll=2))
+    flops = c1["flops"] + (L - 1) * (c2["flops"] - c1["flops"])
+    bytes_acc = c1["bytes"] + (L - 1) * (c2["bytes"] - c1["bytes"])
+    coll_total = c1["coll"] + (L - 1) * (c2["coll"] - c1["coll"])
+    coll = {
+        op: c1["coll_by_op"].get(op, 0)
+        + (L - 1) * (c2["coll_by_op"].get(op, 0) - c1["coll_by_op"].get(op, 0))
+        for op in set(c1["coll_by_op"]) | set(c2["coll_by_op"])
+        if op != "total"
+    }
+    raw = _costs(compiled)
+    n_chips = mesh.size
+
+    # The compiled SPMD module is the PER-DEVICE program: cost_analysis
+    # flops/bytes and parsed collective bytes are per-chip already.
+    # XLA 'bytes accessed' sums operand+result bytes of every op with no
+    # fusion credit (gross upper bound on CPU HLO); we pair it with an
+    # analytic lower bound (params + checkpointed activations + logits).
+    mem_lb = _memory_floor_bytes(cfg, shape_name, mesh, accum)
+    terms = {
+        "compute_s": flops / PEAK_FLOPS,
+        "memory_s": mem_lb / HBM_BW,
+        "collective_s": coll_total / ICI_BW,
+    }
+    terms_ub = {"memory_ub_s": bytes_acc / HBM_BW}
+    bottleneck = max(terms, key=terms.get)
+    t_lower = 0.0
+
+    kind = configs.SHAPES[shape_name]["kind"]
+    n_active = cfg.active_param_count()
+    sh = configs.SHAPES[shape_name]
+    tokens = sh["batch"] * sh["seq"] if kind == "train" else (
+        sh["batch"] * sh["seq"] if kind == "prefill" else sh["batch"])
+    mult = 6 if kind == "train" else 2
+    model_flops = mult * n_active * tokens
+
+    result = {
+        "arch": arch, "shape": shape_name, "mesh": describe(mesh),
+        "kind": kind,
+        "params_b": round(cfg.param_count() / 1e9, 3),
+        "active_params_b": round(n_active / 1e9, 3),
+        "hlo_gflops": flops / 1e9,
+        "hlo_gbytes": bytes_acc / 1e9,
+        "collective_gbytes": coll_total / 1e9,
+        "collectives": {k: v / 1e9 for k, v in coll.items()},
+        "raw_uncorrected": {k: v for k, v in raw.items() if k != "coll_by_op"},
+        "bytes_per_device": int(getattr(mem, "temp_size_in_bytes", 0)
+                                + getattr(mem, "argument_size_in_bytes", 0)
+                                + getattr(mem, "output_size_in_bytes", 0)),
+        "temp_bytes_per_device": int(getattr(mem, "temp_size_in_bytes", 0)),
+        "arg_bytes_per_device": int(getattr(mem, "argument_size_in_bytes", 0)),
+        **{k: float(v) for k, v in terms.items()},
+        "bottleneck": bottleneck,
+        "model_flops": model_flops,
+        "useful_flops_frac": (model_flops / n_chips) / flops if flops else 0.0,
+        "memory_ub_s": terms_ub["memory_ub_s"],
+        "memory_lb_bytes": mem_lb,
+        "lower_s": round(t_lower, 1), "compile_s": round(t_compile, 1),
+    }
+    if verbose:
+        print(f"[{arch} x {shape_name} @ {describe(mesh)}]")
+        print(f"  compile {t_compile:.0f}s | HLO {flops/1e12:.2f} TF, "
+              f"{bytes_acc/1e9:.1f} GB, coll {coll_total/1e9:.2f} GB")
+        print(f"  terms: compute {terms['compute_s']*1e3:.3f} ms | "
+              f"memory(lb) {terms['memory_s']*1e3:.3f} ms "
+              f"(ub {terms_ub['memory_ub_s']*1e3:.1f}) | "
+              f"collective {terms['collective_s']*1e3:.3f} ms "
+              f"-> {bottleneck}")
+        print(f"  per-device bytes: temp {result['temp_bytes_per_device']/2**30:.2f} GiB, "
+              f"args {result['arg_bytes_per_device']/2**30:.2f} GiB")
+        print(f"  useful-FLOP fraction {result['useful_flops_frac']:.2f}")
+        sys.stdout.flush()
+    return result
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", type=str, default=None)
+    ap.add_argument("--shape", type=str, default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--json", type=str, default=None)
+    args = ap.parse_args()
+
+    meshes = []
+    if args.both_meshes:
+        meshes = [make_production_mesh(), make_production_mesh(multi_pod=True)]
+    else:
+        meshes = [make_production_mesh(multi_pod=args.multi_pod)]
+
+    cells = []
+    if args.all:
+        for arch in configs.list_archs():
+            cfg = configs.get_config(arch)
+            for shape in configs.applicable_shapes(cfg):
+                cells.append((arch, shape))
+    else:
+        cells = [(args.arch, args.shape)]
+
+    results, failures = [], []
+    for mesh in meshes:
+        for arch, shape in cells:
+            try:
+                results.append(dryrun_cell(arch, shape, mesh))
+            except Exception as e:  # noqa: BLE001 - report and continue
+                print(f"[FAIL] {arch} x {shape} @ {describe(mesh)}: "
+                      f"{type(e).__name__}: {e}")
+                sys.stdout.flush()
+                failures.append({"arch": arch, "shape": shape,
+                                 "mesh": describe(mesh), "error": str(e)[:2000]})
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump({"results": results, "failures": failures}, f, indent=1)
+    print(f"\n{len(results)} cells OK, {len(failures)} failed")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

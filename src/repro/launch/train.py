@@ -1,0 +1,208 @@
+"""Production training driver.
+
+Fault-tolerance features wired here:
+  * resume from the latest atomic checkpoint (params + optimizer + loss
+    scale + data-iterator state) — restart-safe;
+  * SIGTERM/SIGINT -> save-and-exit (preemption handling);
+  * periodic + final checkpointing (keep-last GC);
+  * step watchdog: a daemon thread logs (and would page, in production) if
+    a step exceeds ``watchdog_factor`` x the trailing-median step time —
+    straggler/hang mitigation;
+  * elastic restarts: the mesh is built from however many devices exist
+    (launch.mesh.make_mesh_for) and restore reshards into it.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.train --arch llama3-8b --smoke \
+      --steps 50 --batch 8 --seq 128 --ckpt-dir /tmp/run1
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import signal
+import statistics
+import threading
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import configs
+from repro.checkpointing.ckpt import CheckpointManager
+from repro.core.checkpoint import CheckpointConfig
+from repro.core.mixed_precision import LossScale
+from repro.data.synthetic import token_stream
+from repro.launch.mesh import describe, make_mesh_for
+from repro.models import transformer
+from repro.optim import adamw
+from repro.train.train_step import TrainConfig, make_train_step
+
+
+class Watchdog:
+    """Logs when the current step runs long (straggler/hang detection)."""
+
+    def __init__(self, factor: float = 5.0, min_history: int = 5):
+        self.factor, self.min_history = factor, min_history
+        self.times: list[float] = []
+        self._started: float | None = None
+        self._stop = threading.Event()
+        self.alerts = 0
+        self._thread = threading.Thread(target=self._run, daemon=True)
+        self._thread.start()
+
+    def step_start(self):
+        self._started = time.time()
+
+    def step_end(self):
+        if self._started is not None:
+            self.times.append(time.time() - self._started)
+            self.times = self.times[-100:]
+        self._started = None
+
+    def _run(self):
+        while not self._stop.wait(0.5):
+            if self._started is None or len(self.times) < self.min_history:
+                continue
+            med = statistics.median(self.times)
+            if time.time() - self._started > self.factor * med:
+                self.alerts += 1
+                print(f"[watchdog] step running {time.time()-self._started:.1f}s"
+                      f" > {self.factor:.0f}x median {med:.2f}s — straggler?")
+                self._started = None  # one alert per step
+
+    def close(self):
+        self._stop.set()
+
+
+def synthetic_lm_batches(cfg, batch: int, seq: int, *, seed=0, state=None):
+    """Deterministic, resumable synthetic LM stream (batch index = state)."""
+    start = state or 0
+    corpus = token_stream(max(200_000, batch * (seq + 1) * 4), cfg.vocab,
+                          seed=seed)
+    i = start
+    while True:
+        rng = np.random.default_rng((seed, i))
+        offs = rng.integers(0, len(corpus) - seq - 1, size=batch)
+        toks = np.stack([corpus[o:o + seq] for o in offs])
+        labs = np.stack([corpus[o + 1:o + seq + 1] for o in offs])
+        yield i, {"tokens": jnp.asarray(toks), "labels": jnp.asarray(labs)}
+        i += 1
+
+
+def run(args):
+    mesh = make_mesh_for(max_model=args.max_model)
+    print(f"mesh: {describe(mesh)}")
+    cfg = configs.smoke_config(args.arch) if args.smoke \
+        else configs.get_config(args.arch)
+
+    batch_sds = {
+        "tokens": jax.ShapeDtypeStruct((args.batch, args.seq), jnp.int32),
+        "labels": jax.ShapeDtypeStruct((args.batch, args.seq), jnp.int32),
+    }
+    tc = TrainConfig(
+        policy=args.policy,
+        remat=CheckpointConfig(enabled=not args.no_remat,
+                               policy=args.remat_policy),
+        accum=args.accum,
+        use_loss_scale=(args.policy == "fp16"),
+        opt=adamw.AdamWConfig(lr=args.lr, total_steps=args.steps,
+                              warmup_steps=min(100, args.steps // 10 + 1)),
+    )
+    step_fn, shards = make_train_step(cfg, mesh, tc, batch_sds)
+
+    mgr = CheckpointManager(args.ckpt_dir, keep_last=args.keep_last)
+    params = transformer.init_params(cfg, jax.random.PRNGKey(args.seed))
+    opt = adamw.init(params)
+    ls = LossScale.init() if tc.use_loss_scale else LossScale.noop()
+    start_step, data_state = 0, 0
+
+    latest = mgr.latest_step()
+    if latest is not None and not args.fresh:
+        state_like = {"params": params, "opt": opt}
+        (restored, extra) = mgr.restore(
+            latest, state_like,
+            shardings={"params": shards["params"], "opt": shards["opt"]})
+        params, opt = restored["params"], restored["opt"]
+        start_step = extra.get("step", latest)
+        data_state = extra.get("data_state", 0)
+        if tc.use_loss_scale and "loss_scale" in extra:
+            ls = dataclasses.replace(ls, scale=jnp.float32(extra["loss_scale"]))
+        print(f"resumed from step {start_step} (data batch {data_state})")
+    else:
+        params = jax.device_put(params, shards["params"])
+        opt = jax.device_put(opt, shards["opt"])
+
+    stop = {"now": False}
+
+    def _sig(_s, _f):
+        print("[signal] preemption notice — checkpoint and exit")
+        stop["now"] = True
+
+    old_handlers = [signal.signal(s, _sig) for s in (signal.SIGTERM,
+                                                     signal.SIGINT)]
+
+    def save(step):
+        # `step` here = number of completed steps; resume continues there
+        mgr.save(step, {"params": params, "opt": opt},
+                 extra={"step": step, "data_state": data_state,
+                        "loss_scale": float(ls.scale),
+                        "arch": cfg.arch_id})
+
+    wd = Watchdog()
+    data = synthetic_lm_batches(cfg, args.batch, args.seq, seed=args.seed,
+                                state=data_state)
+    t0 = time.time()
+    try:
+        for step in range(start_step, args.steps):
+            data_state, batch = next(data)
+            wd.step_start()
+            params, opt, ls, metrics = step_fn(params, opt, ls, batch)
+            if step % args.log_every == 0 or step == args.steps - 1:
+                loss = float(metrics["loss"])  # sync point
+                print(f"step {step:5d} loss {loss:.4f} "
+                      f"lr {float(metrics['lr']):.2e} "
+                      f"gnorm {float(metrics['grad_norm']):.2f} "
+                      f"({(time.time()-t0):.1f}s)")
+            wd.step_end()
+            data_state += 1
+            if (step + 1) % args.ckpt_every == 0:
+                save(step + 1)
+            if stop["now"]:
+                save(step + 1)
+                return 0
+        save(args.steps)
+    finally:
+        wd.close()
+        for s, h in zip((signal.SIGTERM, signal.SIGINT), old_handlers):
+            signal.signal(s, h)
+    print("done")
+    return 0
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="llama3-8b")
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced config (CPU-sized)")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--accum", type=int, default=1)
+    ap.add_argument("--policy", default="bf16",
+                    choices=["full", "bf16", "fp16", "bf16_params"])
+    ap.add_argument("--remat-policy", default="full")
+    ap.add_argument("--no-remat", action="store_true")
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_ckpt")
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--keep-last", type=int, default=3)
+    ap.add_argument("--log-every", type=int, default=10)
+    ap.add_argument("--max-model", type=int, default=16)
+    ap.add_argument("--fresh", action="store_true")
+    return run(ap.parse_args())
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

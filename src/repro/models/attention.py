@@ -1,0 +1,312 @@
+"""Attention: GQA with full / sliding-window masks, memory-efficient chunked
+softmax for long prefill, MLA (multi-head latent attention), and cached
+decode paths (optionally over an int8-quantized cache via kernels/kvq)."""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.kvq import ops as kvq_ops
+from repro.models.layers import apply_rope, rms_norm
+
+NEG_INF = -1e30
+CHUNKED_THRESHOLD = 4096   # S*S f32 scores above this use the chunked path
+KV_CHUNK = 1024
+
+
+def _mask_bias(q_pos, k_pos, window, dtype):
+    """(..., Sq, Sk) additive bias: causal + optional sliding window.
+
+    ``window`` may be a python int or a traced scalar (hybrid archs switch
+    window/global per layer inside a scan); window <= 0 means full causal.
+    """
+    dist = q_pos[..., :, None] - k_pos[..., None, :]
+    ok = dist >= 0
+    if isinstance(window, int):
+        if window > 0:
+            ok &= dist < window
+    else:
+        ok &= jnp.where(window > 0, dist < window, True)
+    return jnp.where(ok, 0.0, NEG_INF).astype(dtype)
+
+
+def gqa_attention(q, k, v, *, q_pos, k_pos, window: int = 0,
+                  causal: bool = True, sm_scale: Optional[float] = None):
+    """q: (B, Sq, H, D); k, v: (B, Sk, Hkv, D) -> (B, Sq, H, D).
+
+    Uses a one-shot einsum for short sequences and a KV-chunked
+    online-softmax scan (flash-style, O(Sq * chunk) live scores) for long
+    ones — the S-C idea (recompute over store) applied to attention scores.
+    """
+    b, sq, h, d = q.shape
+    sk, hkv = k.shape[1], k.shape[2]
+    dv = v.shape[-1]
+    g = h // hkv
+    scale = sm_scale if sm_scale is not None else d ** -0.5
+    qg = q.reshape(b, sq, hkv, g, d)
+
+    if sq * sk <= CHUNKED_THRESHOLD ** 2 // 4 or sk <= KV_CHUNK:
+        logits = jnp.einsum("bqhgd,bkhd->bhgqk", qg.astype(jnp.float32),
+                            k.astype(jnp.float32)) * scale
+        if causal:
+            logits += _mask_bias(q_pos, k_pos, window, jnp.float32
+                                 )[:, None, None]
+        p = jax.nn.softmax(logits, axis=-1)
+        out = jnp.einsum("bhgqk,bkhd->bqhgd", p, v.astype(jnp.float32))
+        return out.reshape(b, sq, h, dv).astype(q.dtype)
+
+    # ---- chunked path (python loop: unrolled in HLO so dry-run cost
+    # analysis counts every chunk; XLA's buffer allocator still reuses the
+    # per-chunk score buffers, keeping live scores O(Sq x chunk)) ----
+    nchunk = -(-sk // KV_CHUNK)
+    pad = nchunk * KV_CHUNK - sk
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        k_pos = jnp.pad(k_pos, ((0, 0), (0, pad)), constant_values=2 ** 30)
+
+    m = jnp.full((b, hkv, g, sq), NEG_INF, jnp.float32)
+    l = jnp.zeros((b, hkv, g, sq), jnp.float32)
+    acc = jnp.zeros((b, hkv, g, sq, dv), jnp.float32)
+    qf = qg.astype(jnp.float32)
+    for c in range(nchunk):
+        sl = slice(c * KV_CHUNK, (c + 1) * KV_CHUNK)
+        kc, vc, pc = k[:, sl], v[:, sl], k_pos[:, sl]
+        logits = jnp.einsum("bqhgd,bkhd->bhgqk", qf,
+                            kc.astype(jnp.float32)) * scale
+        if causal:
+            logits += _mask_bias(q_pos, pc, window, jnp.float32)[:, None, None]
+        m_new = jnp.maximum(m, logits.max(-1))
+        alpha = jnp.exp(m - m_new)
+        p = jnp.exp(logits - m_new[..., None])
+        acc = acc * alpha[..., None] + jnp.einsum(
+            "bhgqk,bkhd->bhgqd", p, vc.astype(jnp.float32))
+        l = l * alpha + p.sum(-1)
+        m = m_new
+    out = acc / jnp.maximum(l, 1e-30)[..., None]          # (B,Hkv,G,Sq,Dv)
+    out = jnp.moveaxis(out, 3, 1).reshape(b, sq, h, dv)
+    return out.astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Standard GQA block (projections + rope + attention).
+# ---------------------------------------------------------------------------
+def attn_block(p, x, cfg, *, positions, window: int = 0, layer_window=None,
+               causal: bool = True, mesh=None):
+    """x: (B, S, D_model).  p holds wq/wk/wv/wo.  Returns (out, (k, v))."""
+    b, s, _ = x.shape
+    h, hkv, hd = cfg.n_heads, cfg.n_kv, cfg.head_dim
+    q = (x @ p["wq"]).reshape(b, s, h, hd)
+    k = (x @ p["wk"]).reshape(b, s, hkv, hd)
+    v = (x @ p["wv"]).reshape(b, s, hkv, hd)
+    # NOTE (tried & refuted, EXPERIMENTS §Perf): forcing MQA-style TP here
+    # (q head-sharded, k/v replicated) when kv-heads don't divide the model
+    # axis made llama3/glm4 15% MORE collective-bound — XLA's own hybrid
+    # layout beats forced replication.  The deployed fix for mismatched
+    # head counts is a per-arch mesh shape (TP width divides kv-heads;
+    # e.g. granite trains on (32, 8): collective 7502 -> 538 ms).
+    rope_pos = positions
+    q = apply_rope(q, rope_pos, cfg.rope_theta, cfg.rope_fraction,
+                   cfg.mrope_sections)
+    k = apply_rope(k, rope_pos, cfg.rope_theta, cfg.rope_fraction,
+                   cfg.mrope_sections)
+    pos1d = positions[0] if positions.ndim == 3 else positions
+    w = window if layer_window is None else layer_window
+    if (cfg.attn_backend != "jnp" and causal and isinstance(w, int)
+            and positions.ndim < 3):
+        # Pallas flash kernel (prefill/training hot path); falls back to the
+        # jnp paths for traced per-layer windows (hybrid scan) and M-RoPE
+        from repro.kernels.flash import ops as flash_ops
+        out = flash_ops.flash_attention(
+            jnp.swapaxes(q, 1, 2), jnp.swapaxes(k, 1, 2),
+            jnp.swapaxes(v, 1, 2), causal=True, window=w,
+            backend=cfg.attn_backend)
+        out = jnp.swapaxes(out, 1, 2)
+    else:
+        out = gqa_attention(q, k, v, q_pos=pos1d, k_pos=pos1d, window=w,
+                            causal=causal)
+    return out.reshape(b, s, h * hd) @ p["wo"], (k, v)
+
+
+def cross_attn_block(p, x, enc_kv, cfg):
+    """Decoder cross-attention over precomputed encoder K/V (no rope)."""
+    b, s, _ = x.shape
+    h, hkv, hd = cfg.n_heads, cfg.n_kv, cfg.head_dim
+    k, v = enc_kv                                  # (B, Se, Hkv, hd)
+    q = (x @ p["wq"]).reshape(b, s, h, hd)
+    se = k.shape[1]
+    g = h // hkv
+    qg = q.reshape(b, s, hkv, g, hd).astype(jnp.float32)
+    logits = jnp.einsum("bqhgd,bkhd->bhgqk", qg, k.astype(jnp.float32))
+    logits = logits * hd ** -0.5
+    pr = jax.nn.softmax(logits, -1)
+    out = jnp.einsum("bhgqk,bkhd->bqhgd", pr, v.astype(jnp.float32))
+    out = out.reshape(b, s, h * hd).astype(x.dtype)
+    return out @ p["wo"]
+
+
+# ---------------------------------------------------------------------------
+# MLA (MiniCPM3 / DeepSeek-V2 style multi-head latent attention).
+# ---------------------------------------------------------------------------
+def mla_block(p, x, cfg, *, positions):
+    """Latent-compressed attention; returns (out, (kv_latent, k_rope))."""
+    m = cfg.mla
+    b, s, _ = x.shape
+    h = cfg.n_heads
+    dn, dr, dv = m.qk_nope_dim, m.qk_rope_dim, m.v_head_dim
+
+    q_lat = rms_norm(x @ p["q_a"], p["q_a_norm"], cfg.norm_eps, bf16_grad=cfg.norm_bf16_grad)
+    q = (q_lat @ p["q_b"]).reshape(b, s, h, dn + dr)
+    q_nope, q_rope = q[..., :dn], q[..., dn:]
+
+    kv_all = x @ p["kv_a"]                               # (B,S,kv_lora+dr)
+    kv_lat = rms_norm(kv_all[..., : m.kv_lora_rank], p["kv_a_norm"], cfg.norm_eps, bf16_grad=cfg.norm_bf16_grad)
+    k_rope = kv_all[..., m.kv_lora_rank:].reshape(b, s, 1, dr)
+
+    kv = (kv_lat @ p["kv_b"]).reshape(b, s, h, dn + dv)
+    k_nope, v = kv[..., :dn], kv[..., dn:]
+
+    q_rope = apply_rope(q_rope, positions, cfg.rope_theta)
+    k_rope = apply_rope(k_rope, positions, cfg.rope_theta)
+    qf = jnp.concatenate([q_nope, q_rope], -1)
+    kf = jnp.concatenate([k_nope, jnp.broadcast_to(k_rope, (b, s, h, dr))], -1)
+    out = gqa_attention(qf, kf, v, q_pos=positions, k_pos=positions,
+                        sm_scale=(dn + dr) ** -0.5)
+    out = out.reshape(b, s, h * dv)
+    return out @ p["wo"], (kv_lat, k_rope)
+
+
+def mla_decode(p, x_t, cfg, cache_lat, cache_rope, pos):
+    """One-token MLA decode with weight absorption.
+
+    The latent cache stores only (kv_lora + rope_dim) floats/token — MLA's
+    whole point.  Scores and outputs are computed in latent space:
+      score = (q_nope @ Wk_b) . kv_lat + q_rope . k_rope
+      out   = (softmax . kv_lat) @ Wv_b
+    cache_lat: (B, S, kv_lora); cache_rope: (B, S, dr); pos scalar.
+    """
+    m = cfg.mla
+    b = x_t.shape[0]
+    h = cfg.n_heads
+    dn, dr, dv = m.qk_nope_dim, m.qk_rope_dim, m.v_head_dim
+    s_max = cache_lat.shape[1]
+
+    q_lat = rms_norm(x_t @ p["q_a"], p["q_a_norm"], cfg.norm_eps, bf16_grad=cfg.norm_bf16_grad)
+    q = (q_lat @ p["q_b"]).reshape(b, h, dn + dr)
+    q_nope, q_rope = q[..., :dn], q[..., dn:]
+    pos_arr = jnp.full((b, 1), pos, jnp.int32)
+    q_rope = apply_rope(q_rope[:, None], pos_arr, cfg.rope_theta)[:, 0]
+
+    kv_all = x_t @ p["kv_a"]
+    lat_new = rms_norm(kv_all[..., : m.kv_lora_rank], p["kv_a_norm"], cfg.norm_eps, bf16_grad=cfg.norm_bf16_grad)
+    kr_new = apply_rope(kv_all[..., m.kv_lora_rank:][:, None, None],
+                        pos_arr, cfg.rope_theta)[:, 0, 0]
+
+    cl = jax.lax.dynamic_update_slice(
+        cache_lat, lat_new[:, None].astype(cache_lat.dtype), (0, pos, 0))
+    cr = jax.lax.dynamic_update_slice(
+        cache_rope, kr_new[:, None].astype(cache_rope.dtype), (0, pos, 0))
+
+    kv_b = p["kv_b"].reshape(m.kv_lora_rank, h, dn + dv)
+    wk_b, wv_b = kv_b[..., :dn], kv_b[..., dn:]
+    q_abs = jnp.einsum("bhd,lhd->bhl", q_nope.astype(jnp.float32),
+                       wk_b.astype(jnp.float32))
+    scores = jnp.einsum("bhl,bsl->bhs", q_abs, cl.astype(jnp.float32))
+    scores += jnp.einsum("bhd,bsd->bhs", q_rope.astype(jnp.float32),
+                         cr.astype(jnp.float32))
+    scores = scores * (dn + dr) ** -0.5
+    valid = jnp.arange(s_max)[None, :] <= pos
+    scores = jnp.where(valid[:, None], scores, NEG_INF)
+    pr = jax.nn.softmax(scores, -1)
+    o_lat = jnp.einsum("bhs,bsl->bhl", pr, cl.astype(jnp.float32))
+    out = jnp.einsum("bhl,lhd->bhd", o_lat, wv_b.astype(jnp.float32))
+    out = out.reshape(b, h * dv).astype(x_t.dtype)
+    return out @ p["wo"], (cl, cr)
+
+
+# ---------------------------------------------------------------------------
+# Cached single-token decode.
+# ---------------------------------------------------------------------------
+def attn_decode(p, x_t, cfg, cache_k, cache_s_k, cache_v, cache_s_v, pos,
+                *, window: int = 0, quantized: bool = True, backend: str = "ref",
+                rolling: bool = False):
+    """One-token GQA decode against a (possibly int8) cache.
+
+    x_t: (B, D_model); cache_k/v: (B, Hkv, S, hd) int8 (or bf16 when not
+    quantized, scales ignored); pos: scalar int32 current position.
+    ``rolling``: the cache is a circular window buffer of size S — writes
+    land at ``pos % S`` and every filled slot is in-window by construction
+    (two-tier cache for windowed layers; EXPERIMENTS §Perf).
+    Returns (attn_out (B, D_model), new k/v token (B, Hkv, hd)).
+    """
+    b, _ = x_t.shape
+    h, hkv, hd = cfg.n_heads, cfg.n_kv, cfg.head_dim
+    s_max = cache_k.shape[2]
+    q = (x_t @ p["wq"]).reshape(b, 1, h, hd)
+    k_t = (x_t @ p["wk"]).reshape(b, 1, hkv, hd)
+    v_t = (x_t @ p["wv"]).reshape(b, 1, hkv, hd)
+    pos_arr = jnp.full((b, 1), pos, jnp.int32)
+    if cfg.mrope_sections is not None:
+        pos3 = jnp.broadcast_to(pos_arr[None], (3, b, 1))
+        q = apply_rope(q, pos3, cfg.rope_theta, cfg.rope_fraction,
+                       cfg.mrope_sections)
+        k_t = apply_rope(k_t, pos3, cfg.rope_theta, cfg.rope_fraction,
+                         cfg.mrope_sections)
+    else:
+        q = apply_rope(q, pos_arr, cfg.rope_theta, cfg.rope_fraction)
+        k_t = apply_rope(k_t, pos_arr, cfg.rope_theta, cfg.rope_fraction)
+    q = q[:, 0]                                            # (B, H, hd)
+    k_new = k_t[:, 0]
+    v_new = v_t[:, 0]
+
+    kv_pos = jnp.arange(s_max)
+    if rolling:
+        write_at = pos % s_max
+        # slot j is filled iff j <= pos (pre-wrap) or always (post-wrap);
+        # all filled slots are within the window by construction
+        valid = kv_pos[None, :] <= pos
+    else:
+        write_at = pos
+        valid = kv_pos[None, :] <= pos                     # includes current
+        if isinstance(window, int):
+            if window > 0:
+                valid &= kv_pos[None, :] > pos - window
+        else:
+            valid &= jnp.where(window > 0,
+                               kv_pos[None, :] > pos - window, True)
+    bias = jnp.where(valid, 0.0, NEG_INF).astype(jnp.float32)
+    bias = jnp.broadcast_to(bias, (b, s_max))
+
+    if quantized:
+        kq_new, ks_new = kvq_ops.quantize_kv(k_new)
+        vq_new, vs_new = kvq_ops.quantize_kv(v_new)
+        ck = jax.lax.dynamic_update_slice(cache_k, kq_new[:, :, None],
+                                          (0, 0, write_at, 0))
+        cv = jax.lax.dynamic_update_slice(cache_v, vq_new[:, :, None],
+                                          (0, 0, write_at, 0))
+        csk = jax.lax.dynamic_update_slice(cache_s_k, ks_new[:, :, None],
+                                           (0, 0, write_at))
+        csv = jax.lax.dynamic_update_slice(cache_s_v, vs_new[:, :, None],
+                                           (0, 0, write_at))
+        out = kvq_ops.decode_attention(q, ck, csk, cv, csv, bias=bias,
+                                       backend=backend)
+    else:
+        ck = jax.lax.dynamic_update_slice(
+            cache_k, k_new[:, :, None].astype(cache_k.dtype),
+            (0, 0, write_at, 0))
+        cv = jax.lax.dynamic_update_slice(
+            cache_v, v_new[:, :, None].astype(cache_v.dtype),
+            (0, 0, write_at, 0))
+        csk, csv = cache_s_k, cache_s_v
+        g = h // hkv
+        qg = q.reshape(b, hkv, g, hd).astype(jnp.float32)
+        logits = jnp.einsum("bhgd,bhsd->bhgs", qg, ck.astype(jnp.float32))
+        logits = logits * hd ** -0.5 + bias[:, None, None]
+        pr = jax.nn.softmax(logits, -1)
+        out = jnp.einsum("bhgs,bhsd->bhgd", pr, cv.astype(jnp.float32)
+                         ).reshape(b, h, hd)
+    out = out.reshape(b, h * hd).astype(x_t.dtype)
+    return out @ p["wo"], (ck, csk, cv, csv)

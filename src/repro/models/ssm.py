@@ -1,0 +1,81 @@
+"""Mamba-2 (SSD) sequence mixer: full-sequence training path through the
+chunked SSD kernel, plus O(1)-state single-token decode."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.ssd import ops as ssd_ops
+from repro.models.layers import gated_rms_norm
+
+
+def _split_in_proj(cfg, proj):
+    s = cfg.ssm
+    di, n, h = s.d_inner, s.d_state, s.heads
+    z, xc, b, c, dt = jnp.split(proj, [di, 2 * di, 2 * di + n, 2 * di + 2 * n],
+                                axis=-1)
+    return z, xc, b, c, dt
+
+
+def _causal_conv(x, w, cache=None):
+    """Depthwise causal conv1d.  x: (B, S, C); w: (K, C).
+
+    With ``cache`` (B, K-1, C) the last K-1 inputs are prepended (decode /
+    chunked prefill); returns (y, new_cache).
+    """
+    k = w.shape[0]
+    if cache is None:
+        ctx = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
+    else:
+        ctx = jnp.concatenate([cache.astype(x.dtype), x], axis=1)
+    y = sum(ctx[:, i : i + x.shape[1]] * w[i][None, None] for i in range(k))
+    new_cache = ctx[:, -(k - 1):] if k > 1 else None
+    return jax.nn.silu(y), new_cache
+
+
+def ssm_block(p, x, cfg, *, ssd_backend: str = "ref",
+              return_state: bool = False):
+    """x: (B, S, D) -> (B, S, D) [, {'conv': (B,K-1,C), 'ssm': (B,H,N,P)}]."""
+    s = cfg.ssm
+    b, L, _ = x.shape
+    proj = x @ p["in_proj"]
+    z, xc, bm, cm, dt = _split_in_proj(cfg, proj)
+    conv_in = jnp.concatenate([xc, bm, cm], axis=-1)
+    conv_out, _ = _causal_conv(conv_in, p["conv_w"])
+    conv_tail = conv_in[:, -(s.conv_kernel - 1):]           # decode cache
+    xc, bm, cm = jnp.split(conv_out, [s.d_inner, s.d_inner + s.d_state], -1)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"][None, None])
+    a = -jnp.exp(p["a_log"].astype(jnp.float32))
+    y = ssd_ops.ssd(
+        xc.reshape(b, L, s.heads, s.head_p), dt, a, bm, cm, p["d_skip"],
+        chunk=min(s.chunk, L), backend=ssd_backend,
+        return_state=return_state)
+    if return_state:
+        y, final_state = y
+    y = y.reshape(b, L, s.d_inner)
+    y = gated_rms_norm(y, z, p["norm_w"], cfg.norm_eps)
+    out = y @ p["out_proj"]
+    if return_state:
+        return out, {"conv": conv_tail, "ssm": final_state}
+    return out, None
+
+
+def ssm_decode_step(p, x_t, cfg, conv_cache, ssm_state):
+    """x_t: (B, D).  conv_cache: (B, K-1, conv_dim); ssm_state: (B, H, N, P)."""
+    s = cfg.ssm
+    b = x_t.shape[0]
+    proj = x_t @ p["in_proj"]
+    z, xc, bm, cm, dt = _split_in_proj(cfg, proj)
+    conv_in = jnp.concatenate([xc, bm, cm], axis=-1)[:, None]     # (B, 1, C)
+    conv_out, new_conv = _causal_conv(conv_in, p["conv_w"], cache=conv_cache)
+    xc, bm, cm = jnp.split(conv_out[:, 0], [s.d_inner, s.d_inner + s.d_state], -1)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"][None])
+    a = -jnp.exp(p["a_log"].astype(jnp.float32))
+    new_state, y = ssd_ops.ssd_decode_step(
+        ssm_state.astype(jnp.float32),
+        xc.reshape(b, s.heads, s.head_p).astype(jnp.float32),
+        dt, a, bm.astype(jnp.float32), cm.astype(jnp.float32), p["d_skip"])
+    y = y.reshape(b, s.d_inner).astype(x_t.dtype)
+    y = gated_rms_norm(y, z, p["norm_w"], cfg.norm_eps)
+    return y @ p["out_proj"], new_conv.astype(conv_cache.dtype), \
+        new_state.astype(ssm_state.dtype)

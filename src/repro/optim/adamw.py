@@ -1,0 +1,96 @@
+"""AdamW with decoupled weight decay, cosine schedule, and grad clipping.
+
+Optimizer state shards exactly like the params (mu/nu inherit the param
+PartitionSpecs), so DP+TP training needs no extra rules.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class AdamWState:
+    mu: Any
+    nu: Any
+    count: jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10000
+    min_lr_frac: float = 0.1
+
+
+def schedule(cfg: AdamWConfig, step):
+    step = step.astype(jnp.float32)
+    warm = jnp.minimum(1.0, (step + 1) / max(1, cfg.warmup_steps))
+    prog = jnp.clip((step - cfg.warmup_steps)
+                    / max(1, cfg.total_steps - cfg.warmup_steps), 0.0, 1.0)
+    cos = cfg.min_lr_frac + (1 - cfg.min_lr_frac) * 0.5 * (1 + jnp.cos(jnp.pi * prog))
+    return cfg.lr * warm * cos
+
+
+def init(params) -> AdamWState:
+    zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+    return AdamWState(mu=jax.tree_util.tree_map(zeros, params),
+                      nu=jax.tree_util.tree_map(zeros, params),
+                      count=jnp.zeros((), jnp.int32))
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32)))
+              for x in jax.tree_util.tree_leaves(tree)]
+    return jnp.sqrt(jnp.sum(jnp.stack(leaves)))
+
+
+def update(cfg: AdamWConfig, grads, state: AdamWState, params, *,
+           skip: jax.Array | None = None):
+    """Returns (new_params, new_state, metrics).  ``skip`` (from the fp16
+    loss-scale finite check) freezes params/moments for this step."""
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.grad_clip / jnp.maximum(gnorm, 1e-9)) \
+        if cfg.grad_clip > 0 else jnp.float32(1.0)
+    grads = jax.tree_util.tree_map(
+        lambda g: g.astype(jnp.float32) * scale, grads)
+
+    count = state.count + 1
+    lr = schedule(cfg, state.count)
+    b1c = 1 - cfg.b1 ** count.astype(jnp.float32)
+    b2c = 1 - cfg.b2 ** count.astype(jnp.float32)
+
+    def upd(p, g, m, v):
+        m2 = cfg.b1 * m + (1 - cfg.b1) * g
+        v2 = cfg.b2 * v + (1 - cfg.b2) * jnp.square(g)
+        step_ = lr * (m2 / b1c) / (jnp.sqrt(v2 / b2c) + cfg.eps)
+        decay = jnp.where(jnp.ndim(p) >= 2, cfg.weight_decay, 0.0)
+        p2 = (p.astype(jnp.float32) * (1 - lr * decay) - step_).astype(p.dtype)
+        if skip is not None:
+            keep = skip  # True => skip the update
+            p2 = jnp.where(keep, p, p2)
+            m2 = jnp.where(keep, m, m2)
+            v2 = jnp.where(keep, v, v2)
+        return p2, m2, v2
+
+    flat_p, treedef = jax.tree_util.tree_flatten(params)
+    flat_g = treedef.flatten_up_to(grads)
+    flat_m = treedef.flatten_up_to(state.mu)
+    flat_v = treedef.flatten_up_to(state.nu)
+    out = [upd(p, g, m, v) for p, g, m, v in zip(flat_p, flat_g, flat_m, flat_v)]
+    new_p = treedef.unflatten([o[0] for o in out])
+    new_m = treedef.unflatten([o[1] for o in out])
+    new_v = treedef.unflatten([o[2] for o in out])
+    new_count = count if skip is None else jnp.where(skip, state.count, count)
+    return new_p, AdamWState(new_m, new_v, new_count), {
+        "grad_norm": gnorm, "lr": lr}

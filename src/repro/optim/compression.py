@@ -1,0 +1,79 @@
+"""Gradient compression with error feedback (distributed-optimization trick).
+
+Two codecs for the DP gradient reduction:
+  * int8 per-leaf-scaled quantization (stochastic rounding) — 4x fewer
+    reduction bytes than fp32, unbiased.
+  * top-k sparsification — k largest-magnitude entries per leaf.
+
+Both maintain an *error-feedback* buffer (residual added back next step)
+so compression error does not accumulate as bias.  Used by the explicit
+shard_map DP trainer (``repro.distributed.collectives.compressed_psum``)
+and benchmarked in benchmarks/; the pjit path leaves reduction to XLA.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+
+def quantize_int8(x: jax.Array, key) -> tuple[jax.Array, jax.Array]:
+    amax = jnp.max(jnp.abs(x))
+    scale = jnp.where(amax > 0, amax / 127.0, 1.0)
+    scaled = x / scale
+    noise = jax.random.uniform(key, x.shape, minval=-0.5, maxval=0.5)
+    q = jnp.clip(jnp.round(scaled + noise), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize_int8(q: jax.Array, scale: jax.Array) -> jax.Array:
+    return q.astype(jnp.float32) * scale
+
+
+def compress_with_feedback(grads, residual, key, *, codec: str = "int8",
+                           topk_frac: float = 0.01):
+    """Returns (payload, new_residual).  payload leaves are (q, scale) or
+    (values, indices) — what would cross the DP links."""
+    leaves, treedef = jax.tree_util.tree_flatten(grads)
+    res_leaves = treedef.flatten_up_to(residual) if residual is not None \
+        else [jnp.zeros_like(l) for l in leaves]
+    keys = jax.random.split(key, len(leaves))
+    payload, new_res = [], []
+    for g, r, k in zip(leaves, res_leaves, keys):
+        g = g.astype(jnp.float32) + r
+        if codec == "int8":
+            q, s = quantize_int8(g, k)
+            recon = dequantize_int8(q, s)
+            payload.append((q, s))
+        elif codec == "topk":
+            kk = max(1, int(g.size * topk_frac))
+            flat = g.reshape(-1)
+            vals, idx = jax.lax.top_k(jnp.abs(flat), kk)
+            kept = flat[idx]
+            recon = jnp.zeros_like(flat).at[idx].set(kept).reshape(g.shape)
+            payload.append((kept, idx))
+        else:
+            raise ValueError(codec)
+        new_res.append(g - recon)
+    return treedef.unflatten(payload), treedef.unflatten(new_res)
+
+
+def decompress(payload, like, *, codec: str = "int8"):
+    leaves, treedef = jax.tree_util.tree_flatten(
+        like)
+    pay = treedef.flatten_up_to(payload)
+    out = []
+    for (a, b), l in zip(pay, leaves):
+        if codec == "int8":
+            out.append(dequantize_int8(a, b).reshape(l.shape))
+        else:
+            out.append(jnp.zeros((l.size,), jnp.float32).at[b].set(a)
+                       .reshape(l.shape))
+    return treedef.unflatten(out)
+
+
+def payload_bytes(payload) -> int:
+    return sum(x.size * x.dtype.itemsize
+               for x in jax.tree_util.tree_leaves(payload))

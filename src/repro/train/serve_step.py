@@ -1,0 +1,95 @@
+"""Sharded serving steps: prefill (forward + cache build) and decode.
+
+Decode is the paper's E-D insight deployed: the KV cache lives int8-encoded
+(kernels/kvq) and is dequantized inside the attention read.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.core.mixed_precision import Policy, get_policy
+from repro.distributed import sharding as shd
+from repro.models import transformer
+from repro.models.config import ModelConfig
+
+
+def build_prefill_step(cfg: ModelConfig, *, policy_name: str = "bf16",
+                       quantized: bool = True, scan_unroll: int = 1,
+                       mesh=None):
+    policy = get_policy(policy_name)
+
+    def prefill_step(params, batch):
+        logits, aux = transformer.forward(
+            params, cfg, batch, policy=policy, build_cache=True,
+            cache_quantized=quantized, scan_unroll=scan_unroll, mesh=mesh)
+        # serving returns only the last-position logits + the primed cache
+        return logits[:, -1], aux["cache"]
+
+    return prefill_step
+
+
+def build_decode_step(cfg: ModelConfig, *, policy_name: str = "bf16",
+                      quantized: bool = True, kvq_backend: str = "ref",
+                      scan_unroll: int = 1, mesh=None):
+    policy = get_policy(policy_name)
+
+    def step(params, cache, tokens_t, enc_out=None):
+        kw = {"enc_out": enc_out} if cfg.encoder is not None else {}
+        logits, cache = transformer.decode_step(
+            params, cfg, cache, tokens_t, policy=policy,
+            quantized=quantized, kvq_backend=kvq_backend,
+            scan_unroll=scan_unroll, mesh=mesh, **kw)
+        return logits, cache
+
+    return step
+
+
+def make_serve_steps(cfg: ModelConfig, mesh, input_sds: dict, *,
+                     kind: str, policy_name: str = "bf16",
+                     quantized: bool = True, donate: bool = True,
+                     scan_unroll: int = 1):
+    """jit the prefill or decode step with explicit shardings.
+
+    ``input_sds`` comes from repro.configs.input_specs for the cell.
+    """
+    params_sds = jax.eval_shape(
+        lambda: transformer.init_params(cfg, jax.random.PRNGKey(0)))
+    p_shard = shd.to_shardings(mesh, shd.param_specs(cfg, params_sds))
+    dp = shd.dp_axes(mesh)
+    n_dp = shd.dp_size(mesh)
+
+    if kind == "prefill":
+        fn = build_prefill_step(cfg, policy_name=policy_name,
+                                quantized=quantized, scan_unroll=scan_unroll,
+                                mesh=mesh)
+        b_shard = shd.to_shardings(
+            mesh, shd.batch_specs(cfg, input_sds, mesh))
+        cache_sds = jax.eval_shape(fn, params_sds, input_sds)[1]
+        c_shard = shd.to_shardings(mesh, shd.cache_specs(cfg, cache_sds, mesh))
+        logit_shard = NamedSharding(mesh, P(dp, "model"))
+        return jax.jit(fn, in_shardings=(p_shard, b_shard),
+                       out_shardings=(logit_shard, c_shard)), p_shard
+
+    assert kind == "decode", kind
+    fn = build_decode_step(cfg, policy_name=policy_name, quantized=quantized,
+                           scan_unroll=scan_unroll, mesh=mesh)
+    cache_sds = input_sds["cache"]
+    c_shard = shd.to_shardings(mesh, shd.cache_specs(cfg, cache_sds, mesh))
+    b = input_sds["tokens_t"].shape[0]
+    tok_shard = NamedSharding(mesh, P(dp) if b % n_dp == 0 else P())
+    logit_shard = NamedSharding(
+        mesh, P(dp if b % n_dp == 0 else None, "model"))
+    in_sh = [p_shard, c_shard, tok_shard]
+    args = [None, None, None]
+    if cfg.encoder is not None:
+        enc = input_sds["enc_out"]
+        in_sh.append(NamedSharding(
+            mesh, P(dp if enc.shape[0] % n_dp == 0 else None, None, None)))
+    return jax.jit(fn, in_shardings=tuple(in_sh),
+                   out_shardings=(logit_shard, c_shard),
+                   donate_argnums=(1,) if donate else ()), p_shard

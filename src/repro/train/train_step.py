@@ -1,0 +1,118 @@
+"""Sharded training step factory: pjit(DP+TP) x OpTorch S-C x M-P x accum.
+
+``make_train_step`` assembles the full production step:
+  - mixed precision (Policy + optional fp16 dynamic loss scaling),
+  - sequential-checkpoint remat over the layer scan,
+  - gradient accumulation (lax.scan over microbatches, fp32 accumulators),
+  - AdamW with clipping/schedule,
+and jits it with explicit in/out shardings from repro.distributed.sharding.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.core.checkpoint import CheckpointConfig
+from repro.core.mixed_precision import LossScale, Policy, get_policy, \
+    scaled_value_and_grad
+from repro.distributed import sharding as shd
+from repro.models import transformer
+from repro.models.config import ModelConfig
+from repro.optim import adamw
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainConfig:
+    policy: str = "bf16"
+    remat: CheckpointConfig = CheckpointConfig(enabled=True, policy="full",
+                                               segment_size=1)
+    accum: int = 1                      # gradient-accumulation microbatches
+    scan_unroll: int = 1                # layer-scan unroll (dry-run costing)
+    use_loss_scale: bool = False        # fp16 path
+    opt: adamw.AdamWConfig = adamw.AdamWConfig()
+
+
+def _tree_add(a, b):
+    return jax.tree_util.tree_map(jnp.add, a, b)
+
+
+def build_train_step(cfg: ModelConfig, tc: TrainConfig, mesh=None):
+    """The pure step function (jit-agnostic; used by tests directly)."""
+    policy = get_policy(tc.policy)
+    loss_scale_proto = LossScale.init() if tc.use_loss_scale else None
+
+    def loss_for(p, mb):
+        return transformer.loss_fn(p, cfg, mb, policy=policy, remat=tc.remat,
+                                    scan_unroll=tc.scan_unroll, mesh=mesh)
+
+    vg = scaled_value_and_grad(loss_for, policy, loss_scale_proto)
+
+    def compute_grads(params, ls: Optional[LossScale], batch):
+        nonlocal_vg = scaled_value_and_grad(loss_for, policy, ls) \
+            if ls is not None else vg
+        if tc.accum <= 1:
+            (loss, _aux), grads, finite = nonlocal_vg(params, batch)
+            return loss, grads, finite
+        # microbatch split along the batch axis (positions: (3, B, S))
+        def split(path, x):
+            name = str(path[-1].key) if path else ""
+            if name == "positions" and x.ndim == 3:
+                return x.reshape(3, tc.accum, -1, *x.shape[2:]).swapaxes(0, 1)
+            return x.reshape(tc.accum, x.shape[0] // tc.accum, *x.shape[1:])
+
+        mbs = jax.tree_util.tree_map_with_path(split, batch)
+
+        def body(carry, mb):
+            loss_acc, grad_acc, fin = carry
+            (loss, _aux), grads, finite = nonlocal_vg(params, mb)
+            grads = jax.tree_util.tree_map(
+                lambda a, g: a + g.astype(jnp.float32), grad_acc, grads)
+            return (loss_acc + loss, grads, fin & finite), None
+
+        zero_grads = jax.tree_util.tree_map(
+            lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        (loss, grads, finite), _ = jax.lax.scan(
+            body, (jnp.float32(0), zero_grads, jnp.bool_(True)), mbs)
+        inv = 1.0 / tc.accum
+        grads = jax.tree_util.tree_map(lambda g: g * inv, grads)
+        return loss * inv, grads, finite
+
+    def train_step(params, opt_state, loss_scale, batch):
+        ls = loss_scale if tc.use_loss_scale else None
+        loss, grads, finite = compute_grads(params, ls, batch)
+        skip = ~finite if tc.use_loss_scale else None
+        new_params, new_opt, metrics = adamw.update(
+            tc.opt, grads, opt_state, params, skip=skip)
+        new_ls = loss_scale.update(finite) if tc.use_loss_scale else loss_scale
+        metrics = {"loss": loss, "grads_finite": finite, **metrics}
+        return new_params, new_opt, new_ls, metrics
+
+    return train_step
+
+
+def make_train_step(cfg: ModelConfig, mesh, tc: TrainConfig,
+                    batch_sds: dict, *, donate: bool = True):
+    """jit-compiled sharded step + the sharding trees used to place state."""
+    step = build_train_step(cfg, tc, mesh=mesh)
+    params_sds = jax.eval_shape(
+        lambda: transformer.init_params(cfg, jax.random.PRNGKey(0)))
+    p_spec = shd.param_specs(cfg, params_sds)
+    p_shard = shd.to_shardings(mesh, p_spec)
+    opt_shard = adamw.AdamWState(mu=p_shard, nu=p_shard,
+                                 count=NamedSharding(mesh, P()))
+    b_spec = shd.batch_specs(cfg, batch_sds, mesh)
+    b_shard = shd.to_shardings(mesh, b_spec)
+
+    # loss-scale state is tiny and replicated: leave its sharding to jax
+    jitted = jax.jit(
+        step,
+        in_shardings=(p_shard, opt_shard, None, b_shard),
+        out_shardings=(p_shard, opt_shard, None, None),
+        donate_argnums=(0, 1) if donate else (),
+    )
+    return jitted, dict(params=p_shard, opt=opt_shard, batch=b_shard)

@@ -1,0 +1,109 @@
+"""S-C (remat) core: gradient equivalence, segment placement DP, policies."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.checkpoint import (CheckpointConfig, checkpoint_sequential,
+                                   optimal_segments, remat_scan)
+
+
+def _layer_fns(n, width=4):
+    return [lambda x, i=i: jnp.tanh(x @ jnp.full((width, width), 0.08 + 0.01 * i))
+            for i in range(n)]
+
+
+class TestCheckpointSequential:
+    @pytest.mark.parametrize("n_layers,segments", [(4, 2), (6, 3), (6, 6), (5, 1)])
+    def test_grad_equivalence(self, n_layers, segments):
+        fns = _layer_fns(n_layers)
+        x = jnp.linspace(-1, 1, 8).reshape(2, 4)
+
+        def plain(x):
+            for f in fns:
+                x = f(x)
+            return x.sum()
+
+        ck = checkpoint_sequential(fns, segments)
+        g1 = jax.grad(plain)(x)
+        g2 = jax.grad(lambda x: ck(x).sum())(x)
+        np.testing.assert_allclose(g1, g2, rtol=1e-6)
+
+    def test_explicit_boundaries(self):
+        fns = _layer_fns(5)
+        ck = checkpoint_sequential(fns, 0, boundaries=[2, 4])
+        x = jnp.ones((2, 4))
+        y = ck(x)
+        def plain(x):
+            for f in fns:
+                x = f(x)
+            return x
+        np.testing.assert_allclose(y, plain(x), rtol=1e-6)
+
+
+class TestRematScan:
+    @pytest.mark.parametrize("segment_size", [1, 2, 4])
+    def test_segmented_scan_matches(self, segment_size):
+        n = 4
+        w = jnp.stack([jnp.eye(4) * (0.9 + 0.01 * i) for i in range(n)])
+
+        def body(c, wi):
+            return jnp.tanh(c @ wi), c.sum()
+
+        x = jnp.ones((2, 4))
+        ref, ys_ref = jax.lax.scan(body, x, w)
+        cfg = CheckpointConfig(enabled=True, segment_size=segment_size)
+        out, ys = remat_scan(body, x, w, config=cfg)
+        np.testing.assert_allclose(ref, out, rtol=1e-6)
+        np.testing.assert_allclose(np.asarray(ys_ref),
+                                   np.asarray(ys).reshape(-1), rtol=1e-6)
+
+    def test_grads_match_plain_scan(self):
+        n = 6
+        w = jnp.stack([jnp.eye(3) * 0.9 for _ in range(n)])
+        x = jnp.ones((3,))
+
+        def loss(x, w, seg):
+            cfg = CheckpointConfig(enabled=seg > 0, segment_size=max(seg, 1))
+            def body(c, wi):
+                return jnp.tanh(c @ wi), None
+            out, _ = remat_scan(body, x, w, config=cfg)
+            return out.sum()
+
+        g0 = jax.grad(loss)(x, w, 0)
+        for seg in (1, 2, 3):
+            np.testing.assert_allclose(jax.grad(loss)(x, w, seg), g0, rtol=1e-6)
+
+    def test_indivisible_segment_falls_back(self):
+        """Odd layer counts degrade to the largest divisor, not an error."""
+        w = jnp.stack([jnp.eye(2) * 0.9 for _ in range(5)])
+        x = jnp.ones((2,))
+        out, _ = remat_scan(lambda c, wi: (jnp.tanh(c @ wi), None), x, w,
+                            config=CheckpointConfig(segment_size=2))
+        ref, _ = jax.lax.scan(lambda c, wi: (jnp.tanh(c @ wi), None), x, w)
+        np.testing.assert_allclose(out, ref, rtol=1e-6)
+
+
+class TestOptimalSegments:
+    def test_prefers_narrow_layers(self):
+        # UNet-like profile (paper Fig. 11): bottleneck in the middle
+        sizes = [100, 50, 4, 50, 100]
+        b = optimal_segments(sizes, 1)
+        assert b == [3]  # checkpoint right after the narrow layer
+
+    @given(st.lists(st.integers(1, 100), min_size=3, max_size=12),
+           st.integers(1, 4))
+    @settings(deadline=None, max_examples=30)
+    def test_boundaries_valid_and_beats_worst(self, sizes, k):
+        b = optimal_segments(sizes, k)
+        n = len(sizes)
+        assert all(0 < x < n for x in b)
+        assert len(b) == len(set(b)) <= k
+        # objective never exceeds the no-checkpoint peak (sum of all)
+        prefix = np.concatenate([[0], np.cumsum(sizes)])
+        bounds = [0, *sorted(b), n]
+        stored = sum(sizes[x - 1] for x in b)
+        max_seg = max(prefix[hi] - prefix[lo]
+                      for lo, hi in zip(bounds[:-1], bounds[1:]))
+        assert stored + max_seg <= sum(sizes) + max(sizes)

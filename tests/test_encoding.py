@@ -1,0 +1,90 @@
+"""Paper Algorithms 1-4 + the TPU u32 codec: exactness, capacity limits,
+SBS weight compliance — including hypothesis property tests."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import encoding
+
+settings.register_profile("ci", deadline=None, max_examples=25)
+settings.load_profile("ci")
+
+
+def u8_batches(max_n=6, max_hw=8):
+    return st.tuples(
+        st.integers(1, max_n), st.integers(1, max_hw), st.integers(1, max_hw),
+        st.integers(1, 3), st.integers(0, 2**31 - 1),
+    ).map(lambda t: np.random.default_rng(t[4]).integers(
+        0, 256, size=t[:4], dtype=np.uint8))
+
+
+class TestBase256:
+    @given(u8_batches(max_n=6))
+    def test_roundtrip_exact(self, batch):
+        enc = encoding.encode_base256(batch)
+        dec = encoding.decode_base256(enc, batch.shape[0])
+        np.testing.assert_array_equal(dec, batch)
+
+    def test_capacity_enforced(self):
+        batch = np.zeros((7, 2, 2, 1), np.uint8)
+        with pytest.raises(ValueError):
+            encoding.encode_base256(batch)
+
+    def test_f64_mantissa_limit_is_real(self):
+        """Paper claims 16 images in f64; the 53-bit mantissa caps exact
+        decode at 6 — this documents why the framework uses u32 packing."""
+        rng = np.random.default_rng(1)
+        batch = rng.integers(0, 256, (7, 4, 4, 1), np.uint8)
+        acc = np.zeros(batch.shape[1:], np.float64)
+        for i in range(7):
+            acc += batch[i].astype(np.float64) * (256.0 ** i)
+        dec = encoding.decode_base256(acc, 7)
+        assert not np.array_equal(dec, batch)  # 7th image corrupts
+
+
+class TestLossless:
+    @given(u8_batches(max_n=7))
+    def test_roundtrip_exact(self, batch):
+        enc, off = encoding.encode_lossless(batch)
+        dec = encoding.decode_lossless(enc, off)
+        np.testing.assert_array_equal(dec, batch)
+
+    def test_doubles_capacity(self):
+        batch = np.full((7, 2, 2, 1), 255, np.uint8)
+        enc, off = encoding.encode_lossless(batch)  # 7 > base-256 cap of 6
+        np.testing.assert_array_equal(encoding.decode_lossless(enc, off), batch)
+
+
+class TestU32Codec:
+    @given(u8_batches(max_n=4).filter(lambda b: b.shape[0] == 4))
+    def test_roundtrip(self, batch):
+        packed = encoding.pack_u8_to_u32(batch)
+        assert packed.dtype == np.uint32
+        np.testing.assert_array_equal(encoding.unpack_u32_to_u8(packed), batch)
+
+    def test_requires_multiple_of_4(self):
+        with pytest.raises(ValueError):
+            encoding.pack_u8_to_u32(np.zeros((3, 2, 2), np.uint8))
+
+    def test_compression_ratio(self):
+        assert encoding.compression_ratio(4, "u32") == 16.0
+
+
+class TestSBS:
+    @given(st.integers(0, 1000), st.integers(2, 6))
+    def test_weighted_counts(self, seed, n_classes):
+        rng = np.random.default_rng(seed)
+        labels = rng.integers(0, n_classes, 400)
+        weights = {c: 1.0 + (c == 0) for c in range(n_classes)}  # class 0 2x
+        idx = encoding.selective_batch_indices(labels, weights, 32, rng)
+        assert len(idx) == 32
+        counts = np.bincount(labels[idx], minlength=n_classes)
+        total_w = n_classes + 1.0
+        expect0 = 32 * 2.0 / total_w
+        assert abs(counts[0] - expect0) <= 1.0  # rounding tolerance
+
+    def test_zero_weight_class_excluded(self):
+        rng = np.random.default_rng(0)
+        labels = np.array([0] * 50 + [1] * 50)
+        idx = encoding.selective_batch_indices(labels, {0: 1.0, 1: 0.0}, 10, rng)
+        assert (labels[idx] == 0).all()

@@ -1,0 +1,172 @@
+"""Per-kernel Pallas (interpret=True) vs pure-jnp oracle, with shape/dtype
+sweeps as required for every kernel in kernels/."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import encoding
+from repro.kernels.pack import kernel as pack_kernel, ops as pack_ops, \
+    ref as pack_ref
+from repro.kernels.kvq import kernel as kvq_kernel, ops as kvq_ops, \
+    ref as kvq_ref
+from repro.kernels.ssd import kernel as ssd_kernel, ops as ssd_ops, \
+    ref as ssd_ref
+
+RNG = np.random.default_rng(7)
+
+
+# ---------------------------------------------------------------------------
+# pack: E-D codec kernel
+# ---------------------------------------------------------------------------
+class TestPackKernel:
+    @pytest.mark.parametrize("r,c", [(8, 128), (64, 512), (128, 1024),
+                                     (16, 256)])
+    def test_decode_matches_ref(self, r, c):
+        x = jnp.asarray(RNG.integers(0, 2 ** 32, (r, c), dtype=np.uint32))
+        out = pack_kernel.decode_pallas(x, interpret=True)
+        np.testing.assert_allclose(np.asarray(out),
+                                   np.asarray(pack_ref.decode_ref(x)),
+                                   atol=1e-7)
+
+    @pytest.mark.parametrize("scale,shift", [(1 / 255.0, 0.0), (2.0, -1.0)])
+    def test_decode_normalization(self, scale, shift):
+        x = jnp.asarray(RNG.integers(0, 2 ** 32, (8, 128), dtype=np.uint32))
+        out = pack_kernel.decode_pallas(x, scale=scale, shift=shift,
+                                        interpret=True)
+        ref = pack_ref.decode_ref(x, scale, shift)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=1e-5)
+
+    @pytest.mark.parametrize("shape", [(8, 32, 32, 3), (4, 17, 5, 1),
+                                       (12, 7, 7, 3)])
+    def test_ops_roundtrip_arbitrary_shapes(self, shape):
+        imgs = RNG.integers(0, 256, shape, dtype=np.uint8)
+        packed = jnp.asarray(np.asarray(encoding.pack_u8_to_u32(imgs)))
+        for backend in ("ref", "interpret"):
+            dec = pack_ops.decode(packed, backend=backend)
+            np.testing.assert_allclose(
+                np.asarray(dec), imgs.astype(np.float32) / 255.0, atol=1e-7)
+            enc = pack_ops.encode(jnp.asarray(imgs), backend=backend)
+            np.testing.assert_array_equal(np.asarray(enc), np.asarray(packed))
+
+
+# ---------------------------------------------------------------------------
+# kvq: int8 KV flash-decode kernel
+# ---------------------------------------------------------------------------
+class TestKvqKernel:
+    @pytest.mark.parametrize("b,h,hkv,s,d", [
+        (1, 4, 4, 512, 64),      # MHA
+        (2, 8, 2, 1024, 64),     # GQA 4:1
+        (2, 8, 1, 512, 128),     # MQA
+        (3, 6, 2, 768, 32),      # odd batch, s % 256
+    ])
+    def test_matches_ref(self, b, h, hkv, s, d):
+        q = jnp.asarray(RNG.normal(size=(b, h, d)).astype(np.float32))
+        k = jnp.asarray(RNG.normal(size=(b, hkv, s, d)).astype(np.float32))
+        v = jnp.asarray(RNG.normal(size=(b, hkv, s, d)).astype(np.float32))
+        kq, ks = kvq_ref.quantize_kv(k)
+        vq, vs = kvq_ref.quantize_kv(v)
+        lengths = jnp.asarray(RNG.integers(1, s + 1, size=(b,)))
+        o_ref = kvq_ops.decode_attention(q, kq, ks, vq, vs, lengths=lengths,
+                                         backend="ref")
+        o_int = kvq_ops.decode_attention(q, kq, ks, vq, vs, lengths=lengths,
+                                         backend="interpret")
+        np.testing.assert_allclose(np.asarray(o_int), np.asarray(o_ref),
+                                   atol=3e-5)
+
+    def test_quantization_error_small_vs_exact(self):
+        b, h, s, d = 2, 4, 256, 64
+        q = jnp.asarray(RNG.normal(size=(b, h, d)).astype(np.float32))
+        k = jnp.asarray(RNG.normal(size=(b, h, s, d)).astype(np.float32))
+        v = jnp.asarray(RNG.normal(size=(b, h, s, d)).astype(np.float32))
+        kq, ks = kvq_ref.quantize_kv(k)
+        vq, vs = kvq_ref.quantize_kv(v)
+        bias = jnp.zeros((b, s))
+        o_q = kvq_ref.decode_attention_ref(
+            q.reshape(b, h, 1, d), kq, ks, vq, vs, bias, d ** -0.5)
+        logits = jnp.einsum("bhd,bhsd->bhs", q, k) * d ** -0.5
+        p = jax.nn.softmax(logits, -1)
+        o_exact = jnp.einsum("bhs,bhsd->bhd", p, v)
+        err = np.abs(np.asarray(o_q.reshape(b, h, d)) - np.asarray(o_exact))
+        assert err.max() < 0.03  # int8 quantization noise bound
+
+    def test_quantize_roundtrip_monotone(self):
+        x = jnp.asarray(RNG.normal(size=(4, 16, 64)).astype(np.float32)) * 5
+        q, s = kvq_ref.quantize_kv(x)
+        err = np.abs(np.asarray(kvq_ref.dequantize_kv(q, s)) - np.asarray(x))
+        assert err.max() <= np.abs(np.asarray(x)).max() / 127.0 * 0.51
+
+
+# ---------------------------------------------------------------------------
+# ssd: mamba2 chunk kernel
+# ---------------------------------------------------------------------------
+class TestSSDKernel:
+    @pytest.mark.parametrize("b,L,h,p,n,q", [
+        (1, 128, 2, 16, 32, 32),
+        (2, 256, 3, 16, 32, 64),
+        (2, 256, 4, 64, 128, 128),   # production-like dims
+    ])
+    def test_chunked_matches_sequential(self, b, L, h, p, n, q):
+        x = jnp.asarray(RNG.normal(size=(b, L, h, p)).astype(np.float32))
+        dt = jnp.asarray(RNG.uniform(0.001, 0.1, (b, L, h)).astype(np.float32))
+        a = jnp.asarray(-RNG.uniform(0.5, 2.0, (h,)).astype(np.float32))
+        bm = jnp.asarray(RNG.normal(size=(b, L, n)).astype(np.float32))
+        cm = jnp.asarray(RNG.normal(size=(b, L, n)).astype(np.float32))
+        d = jnp.asarray(RNG.normal(size=(h,)).astype(np.float32))
+        y_seq = ssd_ref.ssd_scan_ref(x, dt, a, bm, cm, d)
+        y_chunk = ssd_ops.ssd(x, dt, a, bm, cm, d, chunk=q, backend="ref")
+        np.testing.assert_allclose(np.asarray(y_chunk), np.asarray(y_seq),
+                                   atol=5e-4, rtol=2e-3)
+
+    def test_pallas_matches_ref(self):
+        g, t, q, n, p = 4, 4, 64, 32, 16
+        c = jnp.asarray(RNG.normal(size=(g, t, q, n)).astype(np.float32))
+        b = jnp.asarray(RNG.normal(size=(g, t, q, n)).astype(np.float32))
+        x = jnp.asarray(RNG.normal(size=(g, t, q, p)).astype(np.float32))
+        acum = jnp.cumsum(
+            jnp.asarray(-RNG.uniform(0.001, 0.2, (g, t, q)).astype(np.float32)),
+            axis=-1)
+        y_ref, st_ref = ssd_ref.ssd_chunk_ref(c, b, x, acum)
+        y_k, st_k = ssd_kernel.ssd_chunk_pallas(c, b, x, acum, interpret=True)
+        np.testing.assert_allclose(np.asarray(y_k), np.asarray(y_ref), atol=1e-5)
+        np.testing.assert_allclose(np.asarray(st_k), np.asarray(st_ref), atol=1e-5)
+
+    def test_decode_step_matches_scan(self):
+        b, L, h, p, n = 2, 16, 2, 8, 16
+        x = jnp.asarray(RNG.normal(size=(b, L, h, p)).astype(np.float32))
+        dt = jnp.asarray(RNG.uniform(0.01, 0.1, (b, L, h)).astype(np.float32))
+        a = jnp.asarray(-RNG.uniform(0.5, 1.0, (h,)).astype(np.float32))
+        bm = jnp.asarray(RNG.normal(size=(b, L, n)).astype(np.float32))
+        cm = jnp.asarray(RNG.normal(size=(b, L, n)).astype(np.float32))
+        d = jnp.zeros((h,))
+        y_seq = ssd_ref.ssd_scan_ref(x, dt, a, bm, cm, d)
+        state = jnp.zeros((b, h, n, p))
+        for t in range(L):
+            state, y_t = ssd_ops.ssd_decode_step(
+                state, x[:, t], dt[:, t], a, bm[:, t], cm[:, t], d)
+            np.testing.assert_allclose(np.asarray(y_t),
+                                       np.asarray(y_seq[:, t]),
+                                       atol=1e-4, rtol=1e-3)
+
+
+# ---------------------------------------------------------------------------
+# flash: prefill attention kernel
+# ---------------------------------------------------------------------------
+class TestFlashKernel:
+    @pytest.mark.parametrize("b,h,hkv,s,d,window", [
+        (1, 4, 4, 256, 64, 0),     # MHA causal
+        (2, 8, 2, 256, 64, 0),     # GQA 4:1
+        (1, 4, 2, 384, 32, 0),     # s % 128 via padding path
+        (1, 4, 4, 256, 64, 64),    # sliding window
+    ])
+    def test_matches_ref(self, b, h, hkv, s, d, window):
+        from repro.kernels.flash import ops as flash_ops
+        q = jnp.asarray(RNG.normal(size=(b, h, s, d)).astype(np.float32))
+        k = jnp.asarray(RNG.normal(size=(b, hkv, s, d)).astype(np.float32))
+        v = jnp.asarray(RNG.normal(size=(b, hkv, s, d)).astype(np.float32))
+        o_ref = flash_ops.flash_attention(q, k, v, window=window,
+                                          backend="ref")
+        o_int = flash_ops.flash_attention(q, k, v, window=window,
+                                          backend="interpret")
+        np.testing.assert_allclose(np.asarray(o_int), np.asarray(o_ref),
+                                   atol=2e-5)

@@ -1,0 +1,99 @@
+"""Launcher-layer units: collective parser, mesh construction, memory floor,
+and an end-to-end preemption (SIGTERM) resume through the real driver."""
+import json
+import os
+import signal
+import subprocess
+import sys
+import time
+
+import pytest
+
+
+def test_collective_parser_counts_and_widening():
+    from repro.launch.dryrun import collective_bytes
+    hlo = "\n".join([
+        "  %all-reduce.1 = f32[16,128]{1,0} all-reduce(%x), replica_groups={}",
+        "  %ar2 = (f32[4,4]{1,0}, f32[2]{0}) all-reduce(%a, %b)",
+        "  %ag = bf16[8,256]{1,0} all-gather(%c), dimensions={0}",
+        "  %w = f32[4,128]{1,0} all-reduce(%convert_fusion.3)",  # widened bf16
+        "  %rs-start = f32[64]{0} reduce-scatter-start(%d)",
+        "  %done = f32[64]{0} all-reduce-done(%rs)",             # skip -done
+        "  %notacoll = f32[2]{0} add(%e, %f)",
+    ])
+    out = collective_bytes(hlo)
+    expected_ar = 16 * 128 * 4 + (16 + 2) * 4 + 4 * 128 * 4 // 2
+    assert out["all-reduce"] == expected_ar
+    assert out["all-gather"] == 8 * 256 * 2
+    assert out["all-reduce_widened"] == 4 * 128 * 2
+    assert out["total"] == sum(v for k, v in out.items()
+                               if k not in ("total",) and
+                               not k.endswith("_widened"))
+
+
+def test_memory_floor_positive_all_cells():
+    from repro import configs
+    from repro.launch.dryrun import _memory_floor_bytes
+    import jax
+    mesh = jax.sharding.AbstractMesh((16, 16), ("data", "model"))
+    for arch in configs.list_archs():
+        cfg = configs.get_config(arch)
+        for shape in configs.applicable_shapes(cfg):
+            fb = _memory_floor_bytes(cfg, shape, mesh, accum=4)
+            assert fb > 0, (arch, shape)
+
+
+def test_make_mesh_for_elastic_shapes():
+    from repro.launch.mesh import make_mesh_for
+    m = make_mesh_for(1)
+    assert m.devices.size == 1
+
+
+def test_layer_runs_partition():
+    import dataclasses as dc
+    from repro import configs
+    from repro.models.transformer import layer_runs
+    cfg = configs.get_config("hymba-1.5b")
+    runs = layer_runs(cfg)
+    assert runs[0] == (0, 1, True)
+    assert sum(hi - lo for lo, hi, _ in runs) == cfg.n_layers
+    # order-preserving and alternating
+    for (a, b, g1), (c, d, g2) in zip(runs, runs[1:]):
+        assert b == c and g1 != g2
+
+
+def test_preemption_sigterm_saves_and_resumes(tmp_path):
+    env = {**os.environ, "PYTHONPATH": "src", "PYTHONUNBUFFERED": "1",
+           "XLA_FLAGS": ""}  # don't inherit dryrun's 512 fake devices
+    args = [sys.executable, "-m", "repro.launch.train", "--arch", "llama3-8b",
+            "--smoke", "--steps", "500", "--batch", "2", "--seq", "32",
+            "--ckpt-dir", str(tmp_path), "--ckpt-every", "1000",
+            "--log-every", "1", "--fresh"]
+    proc = subprocess.Popen(args, env=env, stdout=subprocess.PIPE,
+                            stderr=subprocess.STDOUT, text=True)
+    # wait until a couple of steps have logged, then preempt
+    t0 = time.time()
+    saw_step = False
+    lines = []
+    while time.time() - t0 < 480:
+        line = proc.stdout.readline()
+        if not line:                      # EOF: child died early
+            break
+        lines.append(line)
+        if line.startswith("step     2"):
+            saw_step = True
+            break
+    if not saw_step:
+        proc.kill()
+    assert saw_step, "trainer never reached step 2:\n" + "".join(lines[-20:])
+    proc.send_signal(signal.SIGTERM)
+    proc.wait(timeout=120)
+    from repro.checkpointing.ckpt import CheckpointManager
+    mgr = CheckpointManager(str(tmp_path))
+    assert mgr.latest_step() is not None, "no checkpoint after SIGTERM"
+    # resume run picks it up and finishes quickly
+    resume_args = [a if a != "500" else str(mgr.latest_step() + 2)
+                   for a in args[:-1]]
+    out = subprocess.run(resume_args, env=env, capture_output=True, text=True,
+                         timeout=240)
+    assert "resumed from step" in out.stdout

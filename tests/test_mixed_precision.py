@@ -1,0 +1,55 @@
+"""M-P policies, loss scaling dynamics, master-weight grad semantics."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.mixed_precision import (LossScale, Policy, all_finite,
+                                        get_policy, scaled_value_and_grad)
+
+
+def test_policy_casting():
+    pol = Policy.bf16()
+    tree = {"w": jnp.ones((2,), jnp.float32), "i": jnp.ones((2,), jnp.int32)}
+    out = pol.cast_to_compute(tree)
+    assert out["w"].dtype == jnp.bfloat16
+    assert out["i"].dtype == jnp.int32          # non-float untouched
+
+
+def test_grads_come_back_fp32():
+    pol = Policy.fp16()
+    params = {"w": jnp.ones((3, 3), jnp.float32)}
+    def loss(p, x):
+        return (p["w"] @ x).sum(), {}
+    vg = scaled_value_and_grad(loss, pol, LossScale.init(2.0 ** 8))
+    (l, _), g, fin = vg(params, jnp.ones((3,)))
+    assert g["w"].dtype == jnp.float32
+    assert bool(fin)
+    np.testing.assert_allclose(float(l), 9.0, rtol=1e-2)
+    np.testing.assert_allclose(np.asarray(g["w"]), 1.0, rtol=1e-2)
+
+
+def test_loss_scale_dynamics():
+    ls = LossScale.init(1024.0, growth_interval=2)
+    ls = ls.update(jnp.bool_(False))            # overflow -> halve
+    assert float(ls.scale) == 512.0
+    ls = ls.update(jnp.bool_(True))
+    ls = ls.update(jnp.bool_(True))             # 2 finite steps -> double
+    assert float(ls.scale) == 1024.0
+    assert int(ls.growth_counter) == 0
+
+
+def test_nonfinite_detection():
+    assert not bool(all_finite({"a": jnp.array([1.0, jnp.inf])}))
+    assert bool(all_finite({"a": jnp.array([1.0]), "i": jnp.array([1])}))
+
+
+def test_fp16_overflow_flags_step():
+    pol = Policy.fp16()
+    params = {"w": jnp.full((4, 4), 200.0, jnp.float32)}  # fp16 max ~65k
+    def loss(p, x):
+        h = p["w"] @ x
+        return (h @ h).sum(), {}                # ~ (200*4)^2 * 4 -> inf fp16
+    vg = scaled_value_and_grad(loss, pol, LossScale.init(2.0 ** 15))
+    (_, _), g, fin = vg(params, jnp.ones((4, 4), jnp.float32))
+    assert not bool(fin)

@@ -1,0 +1,108 @@
+"""Beyond-paper perf variants must preserve semantics: chunked CE, EP vs TP
+experts, capacity vs dropless dispatch, bf16-cotangent RMSNorm."""
+import dataclasses as dc
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.models import transformer
+from repro.core.mixed_precision import get_policy
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _batch(cfg, b=2, s=32, seed=0):
+    rng = np.random.default_rng(seed)
+    return {"tokens": jnp.asarray(rng.integers(0, cfg.vocab, (b, s)), jnp.int32),
+            "labels": jnp.asarray(rng.integers(0, cfg.vocab, (b, s)), jnp.int32)}
+
+
+def test_chunked_ce_exact():
+    cfg = configs.smoke_config("llama3-8b")
+    params = transformer.init_params(cfg, KEY)
+    batch = _batch(cfg)
+    l1, _ = transformer.loss_fn(params, cfg, batch)
+    l2, _ = transformer.loss_fn(params, cfg, batch, ce_chunk=8)
+    np.testing.assert_allclose(float(l1), float(l2), rtol=1e-6)
+    g1 = jax.grad(lambda p: transformer.loss_fn(p, cfg, batch)[0])(params)
+    g2 = jax.grad(lambda p: transformer.loss_fn(p, cfg, batch,
+                                                ce_chunk=8)[0])(params)
+    for a, b in zip(jax.tree_util.tree_leaves(g1),
+                    jax.tree_util.tree_leaves(g2)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   atol=1e-5, rtol=1e-4)
+
+
+def test_chunked_ce_tied_embeddings():
+    cfg = configs.smoke_config("qwen2-vl-2b")
+    params = transformer.init_params(cfg, KEY)
+    batch = _batch(cfg)
+    batch["positions"] = jnp.broadcast_to(
+        jnp.arange(32)[None, None], (3, 2, 32)).astype(jnp.int32)
+    l1, _ = transformer.loss_fn(params, cfg, batch)
+    l2, _ = transformer.loss_fn(params, cfg, batch, ce_chunk=16)
+    np.testing.assert_allclose(float(l1), float(l2), rtol=1e-6)
+
+
+def test_capacity_equals_dropless_when_uncapped():
+    cfg = configs.smoke_config("deepseek-moe-16b")
+    cfg_cap = dc.replace(cfg, moe=dc.replace(cfg.moe, capacity_factor=8.0))
+    cfg_drop = dc.replace(cfg, moe=dc.replace(cfg.moe, capacity_factor=0.0))
+    params = transformer.init_params(cfg, KEY)
+    batch = _batch(cfg, b=4)
+    l1, _ = transformer.loss_fn(params, cfg_cap, batch)
+    l2, _ = transformer.loss_fn(params, cfg_drop, batch)
+    np.testing.assert_allclose(float(l1), float(l2), rtol=1e-5)
+
+
+def test_capacity_drops_bounded():
+    """With cf=1.0 some tokens drop but loss stays in the same ballpark."""
+    cfg = configs.smoke_config("granite-moe-3b-a800m")
+    cfg_tight = dc.replace(cfg, moe=dc.replace(cfg.moe, capacity_factor=1.0))
+    cfg_loose = dc.replace(cfg, moe=dc.replace(cfg.moe, capacity_factor=8.0))
+    params = transformer.init_params(cfg, KEY)
+    batch = _batch(cfg, b=4)
+    lt, _ = transformer.loss_fn(params, cfg_tight, batch)
+    ll, _ = transformer.loss_fn(params, cfg_loose, batch)
+    assert abs(float(lt) - float(ll)) < 0.5
+
+
+def test_norm_bf16_grad_forward_identical():
+    cfg = configs.smoke_config("glm4-9b")
+    cfg2 = dc.replace(cfg, norm_bf16_grad=True)
+    params = transformer.init_params(cfg, KEY)
+    batch = _batch(cfg)
+    pol = get_policy("bf16")
+    l1, _ = transformer.loss_fn(params, cfg, batch, policy=pol)
+    l2, _ = transformer.loss_fn(params, cfg2, batch, policy=pol)
+    assert float(l1) == float(l2)
+
+
+def test_norm_bf16_grad_close_grads():
+    cfg = configs.smoke_config("llama3-8b")
+    cfg2 = dc.replace(cfg, norm_bf16_grad=True)
+    params = transformer.init_params(cfg, KEY)
+    batch = _batch(cfg, b=4)
+    pol = get_policy("bf16")
+    g1 = jax.grad(lambda p: transformer.loss_fn(p, cfg, batch,
+                                                policy=pol)[0])(params)
+    g2 = jax.grad(lambda p: transformer.loss_fn(p, cfg2, batch,
+                                                policy=pol)[0])(params)
+    for a, b in zip(jax.tree_util.tree_leaves(g1),
+                    jax.tree_util.tree_leaves(g2)):
+        scale = float(jnp.abs(a).max()) + 1e-9
+        assert float(jnp.abs(a - b).max()) / scale < 0.06
+
+
+def test_flash_attn_backend_matches_jnp():
+    """The Pallas flash-attention path must match the jnp attention path."""
+    cfg = configs.smoke_config("llama3-8b")
+    cfg_flash = dc.replace(cfg, attn_backend="interpret")
+    params = transformer.init_params(cfg, KEY)
+    batch = _batch(cfg)
+    l1, _ = transformer.loss_fn(params, cfg, batch)
+    l2, _ = transformer.loss_fn(params, cfg_flash, batch)
+    np.testing.assert_allclose(float(l1), float(l2), rtol=2e-5)
