@@ -12,6 +12,8 @@ Variants (composable with '+'):
   cechunk         chunked cross-entropy (512-token chunks)
   ep              MoE expert parallelism (experts sharded, full FFN width)
   seg2/seg4       S-C segment size 2/4 (checkpoint every 2nd/4th layer)
+  budget<MB>      profile-driven RematPlan solved to fit <MB> MiB of
+                  activations per microbatch (repro.plan; e.g. budget512)
 """
 from __future__ import annotations
 
@@ -30,9 +32,12 @@ def apply_variant(cfg, variant: str):
     tags = variant.split("+")
     remat = CheckpointConfig(enabled=True, policy="full", segment_size=1)
     ce_chunk = 0
+    mem_budget_mb = 0
     for t in tags:
         if t in ("baseline", ""):
             continue
+        elif t.startswith("budget"):
+            mem_budget_mb = int(t[len("budget"):])
         elif t == "normbf16":
             cfg = dc.replace(cfg, norm_bf16_grad=True)
         elif t == "dots":
@@ -47,18 +52,14 @@ def apply_variant(cfg, variant: str):
             remat = dc.replace(remat, segment_size=int(t[3:]))
         elif t == "mesh32x8":
             import repro.launch.mesh as _mesh2
-            import jax as _jax2
             _mesh2.make_production_mesh = (
-                lambda *, multi_pod=False: _jax2.make_mesh(
-                    (32, 8), ("data", "model"),
-                    axis_types=(_jax2.sharding.AxisType.Auto,) * 2))
+                lambda *, multi_pod=False, _mk=_mesh2.make_mesh: _mk(
+                    (32, 8), ("data", "model")))
         elif t == "mesh256x1":
             import repro.launch.mesh as _mesh
-            import jax as _jax
             _mesh.make_production_mesh = (
-                lambda *, multi_pod=False: _jax.make_mesh(
-                    (256, 1), ("data", "model"),
-                    axis_types=(_jax.sharding.AxisType.Auto,) * 2))
+                lambda *, multi_pod=False, _mk=_mesh.make_mesh: _mk(
+                    (256, 1), ("data", "model")))
         elif t == "dponly":
             # tiny models: drop TP entirely (replicate over the model axis);
             # only the DP weight-grad all-reduce remains
@@ -85,7 +86,8 @@ def apply_variant(cfg, variant: str):
             tr.decode_step = decode_patched
         else:
             raise ValueError(f"unknown variant tag {t!r}")
-    return cfg, dict(remat=remat, ce_chunk=ce_chunk)
+    return cfg, dict(remat=remat, ce_chunk=ce_chunk,
+                     mem_budget_mb=mem_budget_mb)
 
 
 def main():
@@ -104,6 +106,7 @@ def main():
 
     def patched_tc(*a, **k):
         k.setdefault("remat", kw["remat"])
+        k.setdefault("mem_budget_mb", kw["mem_budget_mb"])
         return orig_tc(*a, **k)
     ts.TrainConfig = patched_tc
 

@@ -14,6 +14,9 @@
                   background encode thread (paper Fig. 1).
   tbl_compression gradient-compression payload bytes vs fp32 (framework
                   distributed-optimization feature).
+  plan_vs_uniform profile-driven RematPlan vs uniform even-split remat at
+                  the same checkpoint count (repro.plan acceptance table;
+                  writes BENCH_plan.json).
 
 Prints ``name,us_per_call,derived`` CSV rows (plus derived metrics).
 """
@@ -60,18 +63,23 @@ def _residual_mb(loss_of_params, params, *rest):
 # ---------------------------------------------------------------------------
 def fig8_memory():
     """ResNet-18 activation memory, standard vs sequential checkpoints."""
+    from repro.core.checkpoint import CheckpointConfig
     from repro.models import cnn
+    from repro.plan import RematPlan
     cfg = cnn.resnet18(stem_stride=2)
     params = cnn.init_params(cfg, jax.random.PRNGKey(0))
     imgs = jax.ShapeDtypeStruct((16, 512, 512, 3), jnp.float32)
     labels = jax.ShapeDtypeStruct((16,), jnp.int32)
+    n = cnn.num_layer_fns(cfg)
 
     for name, seg in [("fig8_resnet18_standard", 0),
                       ("fig8_resnet18_sc2", 2),
                       ("fig8_resnet18_sc4", 4),
                       ("fig8_resnet18_sc8", 8)]:
-        def loss(p, im, lb, _seg=seg):
-            return cnn.loss_fn(p, cfg, im, lb, num_segments=_seg)[0]
+        remat = CheckpointConfig(plan=RematPlan.uniform(n, seg)) if seg \
+            else None
+        def loss(p, im, lb, _r=remat):
+            return cnn.loss_fn(p, cfg, im, lb, remat=_r)[0]
         mb = _residual_mb(loss, params, imgs, labels)
         _rows(name, 0.0, f"residual_mb={mb:.0f}")
 
@@ -84,18 +92,20 @@ def fig10_pipelines():
     from repro.core.checkpoint import CheckpointConfig
     from repro.core.mixed_precision import get_policy
 
+    from repro.plan import RematPlan
     cfg = cnn.resnet50(stem_stride=2)
     params = cnn.init_params(cfg, jax.random.PRNGKey(0))
     imgs_f = jax.ShapeDtypeStruct((16, 512, 512, 3), jnp.float32)
     imgs_p = jax.ShapeDtypeStruct((4, 512, 512, 3), jnp.uint32)
     labels = jax.ShapeDtypeStruct((16,), jnp.int32)
+    sc8 = CheckpointConfig(plan=RematPlan.uniform(cnn.num_layer_fns(cfg), 8))
 
     cases = [
-        ("fig10_resnet50_B", dict(num_segments=0), imgs_f),
-        ("fig10_resnet50_ED", dict(num_segments=0, decode_backend="ref"),
+        ("fig10_resnet50_B", dict(remat=None), imgs_f),
+        ("fig10_resnet50_ED", dict(remat=None, decode_backend="ref"),
          imgs_p),
-        ("fig10_resnet50_SC", dict(num_segments=8), imgs_f),
-        ("fig10_resnet50_ED_SC", dict(num_segments=8, decode_backend="ref"),
+        ("fig10_resnet50_SC", dict(remat=sc8), imgs_f),
+        ("fig10_resnet50_ED_SC", dict(remat=sc8, decode_backend="ref"),
          imgs_p),
     ]
     for name, kw, im_sds in cases:
@@ -134,10 +144,14 @@ def fig9_time_acc():
     steps = 60
 
     def run(num_segments, codec, policy="full"):
+        from repro.core.checkpoint import CheckpointConfig
+        from repro.plan import RematPlan
         params = cnn.init_params(cfg, jax.random.PRNGKey(0))
         opt = adamw.init(params)
         ocfg = adamw.AdamWConfig(lr=3e-3, warmup_steps=5, total_steps=steps,
                                  weight_decay=0.0)
+        remat = CheckpointConfig(plan=RematPlan.uniform(
+            cnn.num_layer_fns(cfg), num_segments)) if num_segments else None
 
         @jax.jit
         def step(params, opt, im, lb):
@@ -148,8 +162,7 @@ def fig9_time_acc():
                     p = jax.tree_util.tree_map(
                         lambda x: x.astype(jnp.bfloat16)
                         if jnp.issubdtype(x.dtype, jnp.floating) else x, p)
-                return cnn.loss_fn(p, cfg, im, lb,
-                                   num_segments=num_segments,
+                return cnn.loss_fn(p, cfg, im, lb, remat=remat,
                                    decode_backend=decode)
 
             (l, aux), g = jax.value_and_grad(lossp, has_aux=True)(params)
@@ -177,6 +190,119 @@ def fig9_time_acc():
             ("fig9_ED_SC_MP", 6, "u32", "bf16")]:
         dt, acc = run(seg, codec, pol)
         _rows(name, dt * 1e6 / steps, f"acc={acc:.3f},total_s={dt:.1f}")
+
+
+def plan_vs_uniform():
+    """Profile-driven RematPlan vs uniform even-split remat at the same
+    requested checkpoint count (acceptance benchmark for ``repro.plan``;
+    paper Fig. 11 automated).  Writes BENCH_plan.json next to the repo root
+    so the perf trajectory is tracked.
+
+      * ResNet-18 (pyramid byte profile): the DP puts checkpoints at the
+        narrow late activations -> strictly fewer stored residual bytes
+        than the even split with the SAME number of checkpoints.
+      * transformer, 14-layer smoke config: a uniform ``segment_size`` can
+        only realize divisors of L (requesting ~4 segments of 14 layers
+        degrades to 7 segments = 7 stored carries); the plan realizes
+        exactly 4 non-uniform segments -> fewer stored carries.
+    """
+    import dataclasses
+    import json
+    import os
+    import warnings
+
+    from repro import configs, plan as plan_mod
+    from repro.core.checkpoint import CheckpointConfig
+    from repro.models import cnn, transformer
+
+    out: dict = {}
+
+    # ---- ResNet-18 ------------------------------------------------------
+    cfg = cnn.resnet18(stem_stride=2)
+    params = cnn.init_params(cfg, jax.random.PRNGKey(0))
+    imgs_sds = jax.ShapeDtypeStruct((8, 256, 256, 3), jnp.float32)
+    labels_sds = jax.ShapeDtypeStruct((8,), jnp.int32)
+    prof = plan_mod.profile_resnet(params, cfg, imgs_sds)
+    k = 5
+    planned = plan_mod.plan_min_peak(prof, k)
+    uniform = plan_mod.RematPlan.uniform(prof.n_layers, k + 1)
+    assert len(planned.boundaries) == len(uniform.boundaries) == k
+
+    im_t = jnp.asarray(np.random.default_rng(0).normal(
+        size=(8, 64, 64, 3)).astype(np.float32))
+    lb_t = jnp.asarray(np.arange(8) % 10)
+
+    res_entry = {"checkpoints": k, "shape": list(imgs_sds.shape)}
+    for name, plan in (("uniform", uniform), ("planned", planned)):
+        remat = CheckpointConfig(plan=plan)
+
+        def loss(p, im, lb, _r=remat):
+            return cnn.loss_fn(p, cfg, im, lb, remat=_r)[0]
+
+        mb = _residual_mb(loss, params, imgs_sds, labels_sds)
+        step = jax.jit(jax.grad(
+            lambda p: cnn.loss_fn(p, cfg, im_t, lb_t, remat=remat)[0]))
+        us, _ = _timeit(lambda: step(params), iters=3)
+        res_entry[name] = {
+            "boundaries": list(plan.boundaries),
+            "residual_mb": round(mb, 2),
+            "us_per_step_64px": round(us, 1),
+        }
+        _rows(f"plan_vs_uniform_resnet18_{name}", us,
+              f"residual_mb={mb:.0f},boundaries={list(plan.boundaries)}")
+    assert res_entry["planned"]["residual_mb"] < \
+        res_entry["uniform"]["residual_mb"], "planner must beat even split"
+    out["resnet18"] = res_entry
+
+    # ---- transformer (smoke config deepened to 14 layers) ---------------
+    lcfg = dataclasses.replace(configs.smoke_config("llama3-8b"), n_layers=14)
+    lp = transformer.init_params(lcfg, jax.random.PRNGKey(0))
+    batch_sds = {"tokens": jax.ShapeDtypeStruct((4, 128), jnp.int32),
+                 "labels": jax.ShapeDtypeStruct((4, 128), jnp.int32)}
+    lprof = plan_mod.profile_transformer(lcfg, batch_sds)
+    req_segments = 4                       # what the user asks for
+    tplan = plan_mod.plan_min_peak(lprof, req_segments - 1)
+    # legacy knob: ~L/4 blocks per segment; 14 % 4 != 0 -> divisor fallback
+    from repro.core.checkpoint import _largest_divisor_leq
+    seg_size = -(-lcfg.n_layers // req_segments)
+    seg_size_executed = _largest_divisor_leq(lcfg.n_layers, seg_size)
+    rng = np.random.default_rng(1)
+    batch = {"tokens": jnp.asarray(rng.integers(0, 255, (4, 128), np.int32)),
+             "labels": jnp.asarray(rng.integers(0, 255, (4, 128), np.int32))}
+
+    tf_entry = {"requested_segments": req_segments, "n_layers": lcfg.n_layers,
+                "shape": [4, 128]}
+    cases = (("uniform", CheckpointConfig(segment_size=seg_size)),
+             ("planned", CheckpointConfig(plan=tplan)))
+    for name, remat in cases:
+        def loss(p, b, _r=remat):
+            with warnings.catch_warnings():
+                warnings.simplefilter("ignore")  # divisor fallback, expected
+                return transformer.loss_fn(p, lcfg, b, remat=_r)[0]
+
+        mb = _residual_mb(loss, lp, batch)
+        step = jax.jit(jax.grad(lambda p: loss(p, batch)))
+        us, _ = _timeit(lambda: step(lp), iters=3)
+        tf_entry[name] = {
+            # record what actually EXECUTES: the uniform knob degrades to
+            # the largest divisor of L, not the requested size
+            "segment_sizes": (tplan.segment_sizes() if name == "planned"
+                              else [seg_size_executed]
+                              * (lcfg.n_layers // seg_size_executed)),
+            "residual_mb": round(mb, 2),
+            "us_per_step": round(us, 1),
+        }
+        _rows(f"plan_vs_uniform_transformer_{name}", us,
+              f"residual_mb={mb:.0f}")
+    assert tf_entry["planned"]["residual_mb"] < \
+        tf_entry["uniform"]["residual_mb"], \
+        "plan must beat the degraded uniform split"
+    out["transformer_smoke14"] = tf_entry
+
+    path = os.path.join(os.path.dirname(__file__), "..", "BENCH_plan.json")
+    with open(path, "w") as f:
+        json.dump(out, f, indent=1, sort_keys=True)
+    print(f"# wrote {os.path.normpath(path)}", flush=True)
 
 
 def tbl_codec():
@@ -264,7 +390,7 @@ def tbl_compression():
 
 
 BENCHES = [tbl_codec, tbl_pipeline, tbl_compression, fig8_memory,
-           fig10_pipelines, fig9_time_acc]
+           fig10_pipelines, plan_vs_uniform, fig9_time_acc]
 
 
 def main() -> None:

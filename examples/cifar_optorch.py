@@ -34,7 +34,15 @@ def train(pipeline: str, imgs, labels, steps: int, seed=0):
     use_sc = "SC" in pipeline
     use_mp = "MP" in pipeline
     codec = "u32" if use_ed else "none"
-    segments = 6 if use_sc else 0
+    remat = None
+    if use_sc:
+        # profile-driven S-C: measure the layer chain, put the 5 checkpoints
+        # at the byte-optimal sites (paper Fig. 11, automated by repro.plan)
+        from repro import plan as plan_mod
+        from repro.core.checkpoint import CheckpointConfig
+        img_sds = jax.ShapeDtypeStruct((32, 32, 32, 3), jnp.float32)
+        prof = plan_mod.profile_resnet(params, cfg, img_sds)
+        remat = CheckpointConfig(plan=plan_mod.plan_min_peak(prof, 5))
 
     @jax.jit
     def step(params, opt, im, lb):
@@ -43,7 +51,7 @@ def train(pipeline: str, imgs, labels, steps: int, seed=0):
                 p = jax.tree_util.tree_map(
                     lambda x: x.astype(jnp.bfloat16)
                     if jnp.issubdtype(x.dtype, jnp.floating) else x, p)
-            return cnn.loss_fn(p, cfg, im, lb, num_segments=segments,
+            return cnn.loss_fn(p, cfg, im, lb, remat=remat,
                                decode_backend="ref" if use_ed else None)
         (l, aux), g = jax.value_and_grad(lossp, has_aux=True)(params)
         g = jax.tree_util.tree_map(lambda x: x.astype(jnp.float32), g)

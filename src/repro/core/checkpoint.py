@@ -22,10 +22,13 @@ from __future__ import annotations
 
 import dataclasses
 import functools
+import warnings
 from typing import Any, Callable, Sequence
 
 import jax
 import jax.numpy as jnp
+
+from repro.plan.solver import RematPlan
 
 # ---------------------------------------------------------------------------
 # Named remat policies.
@@ -69,18 +72,24 @@ def resolve_policy(policy: str | Any | None, save_names: Sequence[str] = ()):
 
 @dataclasses.dataclass(frozen=True)
 class CheckpointConfig:
-    """How S-C is applied to a layer stack.
+    """How S-C is applied to a layer stack — the single remat entry point.
 
     enabled:       master switch (False == paper's "standard pipeline").
     policy:        intra-segment saveable policy name (see POLICIES).
     save_names:    if non-empty, overrides policy with save_only_these_names.
-    segment_size:  scanned blocks per remat segment (1 = remat every block).
+    segment_size:  uniform fallback: scanned blocks per remat segment
+                   (1 = remat every block).  Ignored when ``plan`` is set.
+    plan:          a :class:`repro.plan.RematPlan` — profile-driven,
+                   possibly non-uniform checkpoint boundaries (+ optional
+                   per-segment policies).  Produced by ``repro.plan``'s
+                   solvers; serializable for reproducible runs.
     """
 
     enabled: bool = True
     policy: str = "full"
     save_names: tuple[str, ...] = ()
     segment_size: int = 1
+    plan: RematPlan | None = None
 
     def wrap(self, fn: Callable) -> Callable:
         if not self.enabled:
@@ -88,34 +97,72 @@ class CheckpointConfig:
         pol = resolve_policy(self.policy, self.save_names)
         return jax.checkpoint(fn, policy=pol)
 
+    def segment_policy(self, j: int):
+        """Resolved policy for plan segment j.
+
+        A plan carries its own policy (scalar or per-segment) as part of
+        the solved artifact, so when a plan is present it WINS over
+        ``self.policy`` — identically in the scan and sequential paths.
+        ``save_names`` always composes on top.
+        """
+        if self.plan is not None:
+            return resolve_policy(self.plan.segment_policy(j),
+                                  self.save_names)
+        return resolve_policy(self.policy, self.save_names)
+
+    def validated_plan(self, n_layers: int) -> RematPlan | None:
+        """The plan, checked against the actual chain depth."""
+        if self.plan is None:
+            return None
+        if self.plan.n_layers != n_layers:
+            raise ValueError(
+                f"RematPlan was solved for {self.plan.n_layers} layers but "
+                f"the model has {n_layers}; re-run the planner "
+                f"(plan source: {self.plan.source!r})")
+        return self.plan
+
 
 # ---------------------------------------------------------------------------
 # Explicit layer-list form (paper's Algorithm: segments of a Sequential).
 # ---------------------------------------------------------------------------
 def checkpoint_sequential(
     layer_fns: Sequence[Callable[[Any], Any]],
-    num_segments: int,
+    num_segments: int = 0,
     *,
     policy: str | None = "full",
     boundaries: Sequence[int] | None = None,
+    plan: RematPlan | None = None,
+    save_names: Sequence[str] = (),
 ) -> Callable[[Any], Any]:
     """Compose ``layer_fns`` into a single function with S-C applied.
 
-    Layers are grouped into ``num_segments`` contiguous segments (or at the
-    explicit ``boundaries``, e.g. from :func:`optimal_segments`).  Each
-    segment except the last is wrapped in ``jax.checkpoint``: its inputs are
-    stored, its intermediates recomputed on the backward pass — exactly the
-    paper's scheme ("the inputs of each segment will be saved for re-running
-    the segment in the backward pass").
+    Layers are grouped into ``num_segments`` contiguous segments, at the
+    explicit ``boundaries``, or per a solved :class:`RematPlan`.  A plan's
+    policy (scalar or per-segment) overrides ``policy`` — the plan is one
+    artifact, boundaries + policy; ``save_names`` composes on top either
+    way.  Each segment except the last is wrapped in ``jax.checkpoint``:
+    its inputs are stored, its intermediates recomputed on the backward
+    pass — exactly the paper's scheme ("the inputs of each segment will be
+    saved for re-running the segment in the backward pass").
     """
     n = len(layer_fns)
-    if boundaries is None:
+    save_names = tuple(save_names)
+    seg_policies: list[Any] | None = None
+    if plan is not None:
+        if plan.n_layers != n:
+            raise ValueError(
+                f"RematPlan solved for {plan.n_layers} layers applied to a "
+                f"{n}-layer chain (plan source: {plan.source!r})")
+        bounds = [0, *plan.boundaries, n]
+        seg_policies = [resolve_policy(plan.segment_policy(j), save_names)
+                        for j in range(plan.n_segments)]
+    elif boundaries is None:
         num_segments = max(1, min(num_segments, n))
         # Even split, same convention as torch.utils.checkpoint_sequential.
         bounds = [round(i * n / num_segments) for i in range(num_segments + 1)]
     else:
         bounds = [0, *sorted(boundaries), n]
-    pol = resolve_policy(policy)
+    pol = resolve_policy(policy, save_names)
 
     def make_segment(fns):
         def seg(x):
@@ -124,18 +171,19 @@ def checkpoint_sequential(
             return x
         return seg
 
-    segments = []
-    for lo, hi in zip(bounds[:-1], bounds[1:]):
+    segments, policies = [], []
+    for j, (lo, hi) in enumerate(zip(bounds[:-1], bounds[1:])):
         if lo == hi:
             continue
         segments.append(make_segment(layer_fns[lo:hi]))
+        policies.append(seg_policies[j] if seg_policies is not None else pol)
 
     def apply(x):
         # The last segment is NOT checkpointed: its activations feed the loss
         # directly and would be recomputed immediately anyway (paper: "all
         # segments except the last").
-        for seg in segments[:-1]:
-            x = jax.checkpoint(seg, policy=pol)(x)
+        for seg, p in zip(segments[:-1], policies[:-1]):
+            x = jax.checkpoint(seg, policy=p)(x)
         return segments[-1](x)
 
     return apply
@@ -144,6 +192,14 @@ def checkpoint_sequential(
 # ---------------------------------------------------------------------------
 # Scan form: S-C over a homogeneous stacked-params layer stack.
 # ---------------------------------------------------------------------------
+def _largest_divisor_leq(n: int, k: int) -> int:
+    """Largest d with d | n and d <= k (>= 1)."""
+    for d in range(min(n, k), 1, -1):
+        if n % d == 0:
+            return d
+    return 1
+
+
 def remat_scan(
     body: Callable[[Any, Any], tuple[Any, Any]],
     carry: Any,
@@ -155,22 +211,60 @@ def remat_scan(
 ):
     """``lax.scan`` over stacked per-layer params with S-C applied to the body.
 
-    With ``segment_size > 1`` the stack is reshaped to
-    ``(n_segments, segment_size, ...)`` and an inner (rematted) scan runs the
-    segment — one checkpoint per *segment*, matching the paper's segment
-    granularity rather than per-layer granularity.
+    Three granularities, all selected via ``config``:
+
+      * per-block (default): every scanned block is its own remat segment;
+      * uniform ``segment_size``: the stack is reshaped to
+        ``(n_segments, segment_size, ...)`` and an inner (rematted) scan
+        runs each segment — one checkpoint per *segment*, the paper's
+        segment granularity;
+      * a solved ``config.plan``: non-uniform boundaries from the memory
+        planner — one (possibly per-segment-policied) remat segment per
+        plan segment.  EVERY segment is rematted (matching the uniform
+        scan path, where only segment-input carries are stored); an empty
+        plan (no boundaries) means the planner found everything fits and
+        runs a plain, un-rematted scan.
     """
+    n = length if length is not None else \
+        jax.tree_util.tree_leaves(xs)[0].shape[0]
+
+    if config.enabled and config.plan is not None:
+        plan = config.validated_plan(n)
+        if not plan.boundaries:
+            # planner says everything fits: standard pipeline, no remat
+            return jax.lax.scan(body, carry, xs, length=n, unroll=unroll)
+        segments = plan.segments()
+        ys_parts = []
+        for j, (lo, hi) in enumerate(segments):
+            xs_seg = jax.tree_util.tree_map(lambda a, _lo=lo, _hi=hi:
+                                            a[_lo:_hi], xs)
+
+            def seg_fn(c, xsg, _len=hi - lo):
+                return jax.lax.scan(body, c, xsg, length=_len, unroll=unroll)
+
+            seg_fn = jax.checkpoint(seg_fn, policy=config.segment_policy(j))
+            carry, ys = seg_fn(carry, xs_seg)
+            ys_parts.append(ys)
+        ys_all = jax.tree_util.tree_map(
+            lambda *parts: jnp.concatenate(parts, axis=0), *ys_parts)
+        return carry, ys_all
+
     seg = config.segment_size if config.enabled else 1
     if seg <= 1:
-        return jax.lax.scan(config.wrap(body), carry, xs, length=length, unroll=unroll)
+        return jax.lax.scan(config.wrap(body), carry, xs, length=length,
+                            unroll=unroll)
 
-    import math
-    n = length if length is not None else jax.tree_util.tree_leaves(xs)[0].shape[0]
     if n % seg != 0:
-        # fall back to the largest divisor (keeps shallow probe configs and
-        # odd layer counts working; segment_size is a perf knob, not a
-        # semantic one)
-        seg = math.gcd(n, seg)
+        # fall back to the LARGEST divisor <= requested (48 layers @ segment
+        # 5 -> 4, not gcd's 1 == per-layer remat); segment_size is a perf
+        # knob, not a semantic one, but silently degrading to per-layer
+        # storage defeats its purpose — so warn.
+        new_seg = _largest_divisor_leq(n, seg)
+        warnings.warn(
+            f"remat_scan: segment_size={seg} does not divide {n} scanned "
+            f"layers; using largest divisor {new_seg} (use a RematPlan for "
+            f"non-uniform segments)", stacklevel=2)
+        seg = new_seg
     if seg <= 1:
         return jax.lax.scan(config.wrap(body), carry, xs, length=length,
                             unroll=unroll)
@@ -202,60 +296,12 @@ def optimal_segments(activation_bytes: Sequence[int], num_checkpoints: int) -> l
     This is the paper's "checkpoint the narrow middle layer" advice as a DP:
     on a UNet-shaped size profile the solver picks the bottleneck layers.
     Returns sorted boundary indices (exclusive of 0 and n).
+
+    (Thin wrapper: the DP lives in ``repro.plan.solver`` alongside the
+    budget-aware primal solver; see ``repro.plan`` for profile-driven use.)
     """
-    n = len(activation_bytes)
-    k = min(num_checkpoints, n - 1)
-    if k <= 0 or n <= 1:
-        return []
-    sizes = list(activation_bytes)
-    # prefix[i] = sum(sizes[:i])
-    prefix = [0]
-    for s in sizes:
-        prefix.append(prefix[-1] + s)
-
-    def seg_cost(lo, hi):  # live recompute bytes for segment (lo, hi]
-        return prefix[hi] - prefix[lo]
-
-    INF = float("inf")
-    # dp[j][i] = (stored_bytes, max_seg) best over placements of j checkpoints
-    # in the first i layers, scoring stored + max_seg at the end.  We track
-    # the full frontier per (j, i) on the two objectives via minimizing
-    # stored + max_seg directly with memo over last boundary.
-    # n is small (layer counts ≤ 64) so an O(n^2 k) DP with the combined
-    # objective evaluated lazily is fine.
-    import math
-
-    best_choice: dict[tuple[int, int], tuple[float, tuple[int, ...]]] = {}
-
-    def solve(j: int, i: int) -> list[tuple[int, tuple[int, ...], int]]:
-        """Return list of (stored, boundaries, max_seg) Pareto states for
-        j checkpoints placed all < i, segments closed up to boundary i."""
-        key = (j, i)
-        if key in best_choice:
-            return best_choice[key]  # type: ignore[return-value]
-        if j == 0:
-            states = [(0, (), seg_cost(0, i))]
-        else:
-            states = []
-            for b in range(j, i):  # last checkpoint at layer b (1-indexed site b)
-                for stored, bounds, mx in solve(j - 1, b):
-                    states.append(
-                        (stored + sizes[b - 1], bounds + (b,), max(mx, seg_cost(b, i)))
-                    )
-            # Pareto-prune on (stored, max_seg)
-            states.sort(key=lambda s: (s[0], s[2]))
-            pruned, best_mx = [], math.inf
-            for s in states:
-                if s[2] < best_mx:
-                    pruned.append(s)
-                    best_mx = s[2]
-            states = pruned
-        best_choice[key] = states  # type: ignore[assignment]
-        return states
-
-    final = solve(k, n)
-    best = min(final, key=lambda s: s[0] + s[2])
-    return list(best[1])
+    from repro.plan.solver import min_peak_boundaries
+    return min_peak_boundaries(activation_bytes, num_checkpoints)
 
 
 def activation_bytes_of(fn: Callable, *args, **kwargs) -> int:

@@ -29,12 +29,15 @@ _PENULT = {"wo", "w_down", "w2", "shared_down", "embed"}
 
 
 def dp_axes(mesh: Mesh):
-    return ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+    # a bare axis name (not a 1-tuple) so PartitionSpec entries compare
+    # equal across jax versions that do / don't normalize singleton tuples
+    return ("pod", "data") if "pod" in mesh.axis_names else "data"
 
 
 def dp_size(mesh: Mesh) -> int:
+    axes = dp_axes(mesh)
     s = 1
-    for a in dp_axes(mesh):
+    for a in ((axes,) if isinstance(axes, str) else axes):
         s *= mesh.shape[a]
     return s
 

@@ -236,6 +236,30 @@ def dryrun_cell(arch: str, shape_name: str, mesh, *, verbose=True,
     kind = configs.SHAPES[shape_name]["kind"]
     n_active = cfg.active_param_count()
     sh = configs.SHAPES[shape_name]
+
+    # Planner cross-check (train cells): predicted activation peak of the
+    # default per-block remat vs what XLA actually compiled.  The planner
+    # models ONLY checkpointed activations + recompute live set, so it must
+    # lower-bound the compiled temp bytes; a violation means the cost model
+    # drifted from the executed remat structure.
+    plan_info = {}
+    if kind == "train":
+        try:
+            from repro import plan as plan_mod
+            from repro.train.train_step import microbatch_specs
+            batch_sds = {"tokens": jax.ShapeDtypeStruct(
+                (sh["batch"], sh["seq"]), jnp.int32)}
+            prof = plan_mod.profile_transformer(
+                cfg, microbatch_specs(batch_sds, accum=accum, mesh=mesh))
+            per_block = plan_mod.RematPlan.uniform(cfg.n_layers, cfg.n_layers)
+            rep = plan_mod.plan_report(prof, per_block)
+            plan_info = {
+                "plan_peak_bytes": rep["peak_bytes"],
+                "plan_no_remat_bytes": rep["no_remat_bytes"],
+                "plan_n_segments": rep["n_segments"],
+            }
+        except Exception as e:  # noqa: BLE001 - advisory, never fail a cell
+            plan_info = {"plan_error": f"{type(e).__name__}: {e}"[:200]}
     tokens = sh["batch"] * sh["seq"] if kind == "train" else (
         sh["batch"] * sh["seq"] if kind == "prefill" else sh["batch"])
     mult = 6 if kind == "train" else 2
@@ -263,6 +287,7 @@ def dryrun_cell(arch: str, shape_name: str, mesh, *, verbose=True,
         "memory_ub_s": terms_ub["memory_ub_s"],
         "memory_lb_bytes": mem_lb,
         "lower_s": round(t_lower, 1), "compile_s": round(t_compile, 1),
+        **plan_info,
     }
     if verbose:
         print(f"[{arch} x {shape_name} @ {describe(mesh)}]")
@@ -275,6 +300,11 @@ def dryrun_cell(arch: str, shape_name: str, mesh, *, verbose=True,
               f"-> {bottleneck}")
         print(f"  per-device bytes: temp {result['temp_bytes_per_device']/2**30:.2f} GiB, "
               f"args {result['arg_bytes_per_device']/2**30:.2f} GiB")
+        if "plan_peak_bytes" in result:
+            print(f"  planner: activation peak {result['plan_peak_bytes']/2**30:.2f} GiB "
+                  f"planned (per-block remat) vs {result['temp_bytes_per_device']/2**30:.2f} GiB "
+                  f"compiled temp (no-remat would be "
+                  f"{result['plan_no_remat_bytes']/2**30:.2f} GiB)")
         print(f"  useful-FLOP fraction {result['useful_flops_frac']:.2f}")
         sys.stdout.flush()
     return result

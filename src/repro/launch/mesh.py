@@ -7,6 +7,13 @@ jax device state).  Production target: TPU v5e, 256 chips/pod, 16x16
 ``make_mesh_for(n)`` supports *elastic* restarts: given however many
 devices survive, it picks the largest (data, model) grid with model <= 16,
 and checkpoint restore reshards into it (see repro.checkpointing).
+
+``make_mesh`` / ``abstract_mesh`` are version-compat shims: jax moved the
+mesh-construction API between releases (``axis_types=`` kwarg +
+``jax.sharding.AxisType`` appeared after 0.4.x; ``AbstractMesh`` changed
+from a ``((name, size), ...)`` shape-tuple to ``(sizes, names)``).  All
+repo code and tests construct meshes through these two helpers so the same
+tree runs on either side of the drift.
 """
 from __future__ import annotations
 
@@ -15,14 +22,35 @@ import math
 import jax
 
 
-def _auto(n: int):
-    return (jax.sharding.AxisType.Auto,) * n
+def _axis_type_kwargs(n: int) -> dict:
+    """``axis_types=(Auto,) * n`` on jax versions that have it, else {}."""
+    axis_type = getattr(jax.sharding, "AxisType", None)
+    if axis_type is None:
+        return {}
+    return {"axis_types": (axis_type.Auto,) * n}
+
+
+def make_mesh(shape, axes, **kwargs):
+    """``jax.make_mesh`` across the axis_types API drift."""
+    try:
+        return jax.make_mesh(shape, axes, **_axis_type_kwargs(len(axes)),
+                             **kwargs)
+    except TypeError:
+        return jax.make_mesh(shape, axes, **kwargs)
+
+
+def abstract_mesh(shape, axes):
+    """``jax.sharding.AbstractMesh`` across its signature drift."""
+    try:
+        return jax.sharding.AbstractMesh(tuple(shape), tuple(axes))
+    except TypeError:
+        return jax.sharding.AbstractMesh(tuple(zip(axes, shape)))
 
 
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes, axis_types=_auto(len(axes)))
+    return make_mesh(shape, axes)
 
 
 def make_mesh_for(n_devices: int | None = None, *, max_model: int = 16):
@@ -31,8 +59,7 @@ def make_mesh_for(n_devices: int | None = None, *, max_model: int = 16):
     model = math.gcd(n, max_model)
     while model > 1 and n % model:
         model //= 2
-    return jax.make_mesh((n // model, model), ("data", "model"),
-                         axis_types=_auto(2))
+    return make_mesh((n // model, model), ("data", "model"))
 
 
 def describe(mesh) -> str:

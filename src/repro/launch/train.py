@@ -90,6 +90,37 @@ def synthetic_lm_batches(cfg, batch: int, seq: int, *, seed=0, state=None):
         i += 1
 
 
+def _auto_remat(cfg, args, mesh, batch_sds) -> CheckpointConfig:
+    """Planner-driven remat: budget-constrained when ``--mem-budget-mb``
+    is given (delegating to ``train_step.resolve_remat`` — the same path
+    ``TrainConfig.mem_budget_mb`` takes programmatically), else Chen-style
+    sqrt(L) checkpoints at the byte-optimal sites.  Either way the profile
+    is the per-device microbatch in the policy's compute dtype
+    (``train_step.plan_profile``)."""
+    import math
+
+    from repro import plan as plan_mod
+    from repro.train.train_step import plan_profile, resolve_remat
+
+    base = CheckpointConfig(enabled=True, policy=args.remat_policy)
+    tc0 = TrainConfig(policy=args.policy, remat=base, accum=args.accum,
+                      mem_budget_mb=args.mem_budget_mb)
+    prof = plan_profile(cfg, tc0, batch_sds, mesh=mesh)
+    if args.mem_budget_mb > 0:
+        remat = resolve_remat(cfg, tc0, batch_sds, mesh=mesh).remat
+    else:
+        rp = plan_mod.plan_min_peak(prof, math.isqrt(cfg.n_layers) or 1,
+                                    policy=args.remat_policy)
+        remat = dataclasses.replace(base, plan=rp)
+    rep = plan_mod.plan_report(prof, remat.plan)
+    print(f"remat plan [{remat.plan.source}]: "
+          f"segments {remat.plan.segment_sizes()} "
+          f"peak {rep['peak_bytes']/2**20:.1f} MiB/device "
+          f"(no-remat {rep['no_remat_bytes']/2**20:.1f} MiB, "
+          f"recompute >= {rep['recompute_frac']*100:.0f}% of fwd FLOPs)")
+    return remat
+
+
 def run(args):
     mesh = make_mesh_for(max_model=args.max_model)
     print(f"mesh: {describe(mesh)}")
@@ -100,10 +131,18 @@ def run(args):
         "tokens": jax.ShapeDtypeStruct((args.batch, args.seq), jnp.int32),
         "labels": jax.ShapeDtypeStruct((args.batch, args.seq), jnp.int32),
     }
+    remat_mode = "off" if args.no_remat else args.remat
+    if remat_mode == "off" and args.mem_budget_mb > 0:
+        print("[warn] --mem-budget-mb ignored with remat off")
+    if remat_mode == "auto" or (remat_mode == "on" and args.mem_budget_mb > 0):
+        # a budget implies the planner even without an explicit --remat auto
+        remat = _auto_remat(cfg, args, mesh, batch_sds)
+    else:
+        remat = CheckpointConfig(enabled=remat_mode != "off",
+                                 policy=args.remat_policy)
     tc = TrainConfig(
         policy=args.policy,
-        remat=CheckpointConfig(enabled=not args.no_remat,
-                               policy=args.remat_policy),
+        remat=remat,
         accum=args.accum,
         use_loss_scale=(args.policy == "fp16"),
         opt=adamw.AdamWConfig(lr=args.lr, total_steps=args.steps,
@@ -112,6 +151,10 @@ def run(args):
     step_fn, shards = make_train_step(cfg, mesh, tc, batch_sds)
 
     mgr = CheckpointManager(args.ckpt_dir, keep_last=args.keep_last)
+    if tc.remat.plan is not None:
+        import os
+        os.makedirs(args.ckpt_dir, exist_ok=True)
+        tc.remat.plan.save(os.path.join(args.ckpt_dir, "remat_plan.json"))
     params = transformer.init_params(cfg, jax.random.PRNGKey(args.seed))
     opt = adamw.init(params)
     ls = LossScale.init() if tc.use_loss_scale else LossScale.noop()
@@ -191,8 +234,15 @@ def main():
     ap.add_argument("--accum", type=int, default=1)
     ap.add_argument("--policy", default="bf16",
                     choices=["full", "bf16", "fp16", "bf16_params"])
+    ap.add_argument("--remat", default="on", choices=["on", "off", "auto"],
+                    help="auto: profile-driven RematPlan (see repro.plan)")
+    ap.add_argument("--mem-budget-mb", type=int, default=0,
+                    help="per-device activation-byte budget; > 0 engages "
+                         "the remat planner (with --remat auto, 0 means "
+                         "sqrt(L) checkpoints instead)")
     ap.add_argument("--remat-policy", default="full")
-    ap.add_argument("--no-remat", action="store_true")
+    ap.add_argument("--no-remat", action="store_true",
+                    help="deprecated alias for --remat off")
     ap.add_argument("--lr", type=float, default=3e-4)
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--ckpt-dir", default="/tmp/repro_ckpt")

@@ -97,6 +97,12 @@ def init_params(cfg: ResNetConfig, key) -> dict:
     return p
 
 
+def num_layer_fns(cfg: ResNetConfig) -> int:
+    """Chain length ``layer_fns`` produces (stem + blocks + head) — the
+    ``n_layers`` a RematPlan for this model must be solved for."""
+    return 2 + sum(cfg.stage_sizes)
+
+
 def block_strides(cfg: ResNetConfig) -> list[int]:
     strides = []
     for stage, n_blocks in enumerate(cfg.stage_sizes):
@@ -139,27 +145,38 @@ def layer_fns(params: dict, cfg: ResNetConfig) -> list[Callable]:
     return fns
 
 
-def forward(params, cfg: ResNetConfig, images, *, num_segments: int = 0,
+def forward(params, cfg: ResNetConfig, images, *, remat=None,
             decode_backend: str | None = None):
     """images: f32 (B,H,W,C) or packed u32 (B/4,H,W,C) when decode_backend set.
 
-    num_segments == 0 -> standard pipeline; else S-C with that many segments.
+    ``remat`` is the plan-bearing ``repro.core.checkpoint.CheckpointConfig``
+    (None or ``enabled=False`` -> standard pipeline).  With ``remat.plan``
+    set, S-C segments follow the planner's (possibly non-uniform)
+    boundaries; otherwise layers are grouped uniformly, ``segment_size``
+    layers per segment.  The old raw ``num_segments`` knob is gone — build
+    an even plan with ``RematPlan.uniform(n_layers, k)`` if you need one.
     """
     x = images
     if decode_backend is not None:
         x = pack_ops.decode(x, backend=decode_backend)  # the E-D decode layer
     fns = layer_fns(params, cfg)
-    if num_segments and num_segments > 1:
+    if remat is not None and remat.enabled:
         from repro.core.checkpoint import checkpoint_sequential
-        return checkpoint_sequential(fns, num_segments)(x)
+        if remat.plan is not None:  # the plan carries its own policy
+            return checkpoint_sequential(fns, plan=remat.plan,
+                                         save_names=remat.save_names)(x)
+        n_seg = -(-len(fns) // max(1, remat.segment_size))
+        if n_seg > 1:
+            return checkpoint_sequential(fns, n_seg, policy=remat.policy,
+                                         save_names=remat.save_names)(x)
     for f in fns:
         x = f(x)
     return x
 
 
-def loss_fn(params, cfg: ResNetConfig, images, labels, *, num_segments=0,
+def loss_fn(params, cfg: ResNetConfig, images, labels, *, remat=None,
             decode_backend=None):
-    logits = forward(params, cfg, images, num_segments=num_segments,
+    logits = forward(params, cfg, images, remat=remat,
                      decode_backend=decode_backend)
     logp = jax.nn.log_softmax(logits.astype(jnp.float32))
     nll = -jnp.take_along_axis(logp, labels[:, None], axis=-1).mean()

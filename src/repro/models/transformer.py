@@ -313,6 +313,12 @@ def forward(params, cfg: ModelConfig, batch: dict, *,
     ``build_cache`` (serving prefill) aux carries a decode cache positioned
     at S, in the ``init_cache`` layout (int8-quantized when requested).
     ``return_hidden`` skips the LM head (chunked-CE path in loss_fn).
+
+    ``remat`` is the single S-C entry point: a plan-bearing
+    ``CheckpointConfig`` (``remat.plan`` from ``repro.plan``) applies
+    profile-solved, possibly non-uniform segment boundaries to the block
+    scan; ``segment_size`` is the uniform fallback.  The plan is validated
+    against ``cfg.n_layers`` inside ``remat_scan``.
     """
     tokens = batch["tokens"]
     b, s = tokens.shape

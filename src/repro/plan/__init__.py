@@ -1,0 +1,17 @@
+"""Unified memory planner: profile-driven remat plans (paper Fig. 11 as a
+subsystem).  ``profile_*`` measures a model's layer chain, ``plan_*`` solves
+for checkpoint placement, and the resulting :class:`RematPlan` is executed
+by ``repro.core.checkpoint.CheckpointConfig(plan=...)`` — the single remat
+entry point for every model stack."""
+from repro.plan.profile import (ChainProfile, plan_for_budget, plan_min_peak,
+                                plan_report, profile_resnet,
+                                profile_sequential, profile_transformer)
+from repro.plan.solver import (RematPlan, budget_boundaries,
+                               min_peak_boundaries, plan_metrics)
+
+__all__ = [
+    "ChainProfile", "RematPlan",
+    "profile_sequential", "profile_resnet", "profile_transformer",
+    "plan_min_peak", "plan_for_budget", "plan_report",
+    "min_peak_boundaries", "budget_boundaries", "plan_metrics",
+]

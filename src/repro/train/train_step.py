@@ -35,6 +35,52 @@ class TrainConfig:
     scan_unroll: int = 1                # layer-scan unroll (dry-run costing)
     use_loss_scale: bool = False        # fp16 path
     opt: adamw.AdamWConfig = adamw.AdamWConfig()
+    mem_budget_mb: int = 0              # >0: auto-solve a RematPlan to fit
+
+
+def microbatch_specs(batch_sds: dict, *, accum: int = 1, mesh=None) -> dict:
+    """PER-DEVICE microbatch token spec — the unit the remat planner must
+    budget for: global batch / (data-parallel shards x accum steps).
+    The ONE place this formula lives; launch/train and dryrun reuse it."""
+    b, s = batch_sds["tokens"].shape
+    dp = shd.dp_size(mesh) if mesh is not None else 1
+    return {"tokens": jax.ShapeDtypeStruct(
+        (max(1, b // (dp * max(1, accum))), s), jnp.int32)}
+
+
+def plan_profile(cfg: ModelConfig, tc: TrainConfig, batch_sds: dict,
+                 mesh=None):
+    """The ChainProfile the planner budgets against for this train config:
+    per-device microbatch, in the policy's compute dtype.  Single source —
+    resolve_remat and the launcher's --remat auto both use it."""
+    from repro import plan as plan_mod
+    dtype_bytes = jnp.dtype(get_policy(tc.policy).compute_dtype).itemsize
+    return plan_mod.profile_transformer(
+        cfg, microbatch_specs(batch_sds, accum=tc.accum, mesh=mesh),
+        dtype_bytes=dtype_bytes)
+
+
+def resolve_remat(cfg: ModelConfig, tc: TrainConfig, batch_sds: dict,
+                  mesh=None) -> TrainConfig:
+    """Fill ``tc.remat.plan`` from the memory planner when a budget is set.
+
+    Profiles the block scan at per-device MICROBATCH shape (the remat'd
+    unit under DP sharding + gradient accumulation) in the policy's
+    compute dtype, and solves min-recompute s.t. peak <= budget.  A plan
+    already present (e.g. loaded from a run's plan.json) wins; an explicit
+    plan is validated against the model depth either way.
+    """
+    if tc.remat.plan is not None:
+        tc.remat.validated_plan(cfg.n_layers)
+        return tc
+    if tc.mem_budget_mb <= 0 or not tc.remat.enabled:
+        return tc
+    from repro import plan as plan_mod
+    prof = plan_profile(cfg, tc, batch_sds, mesh=mesh)
+    rp = plan_mod.plan_for_budget(prof, tc.mem_budget_mb * 2 ** 20,
+                                  policy=tc.remat.policy)
+    return dataclasses.replace(
+        tc, remat=dataclasses.replace(tc.remat, plan=rp))
 
 
 def _tree_add(a, b):
@@ -98,6 +144,7 @@ def build_train_step(cfg: ModelConfig, tc: TrainConfig, mesh=None):
 def make_train_step(cfg: ModelConfig, mesh, tc: TrainConfig,
                     batch_sds: dict, *, donate: bool = True):
     """jit-compiled sharded step + the sharding trees used to place state."""
+    tc = resolve_remat(cfg, tc, batch_sds, mesh=mesh)
     step = build_train_step(cfg, tc, mesh=mesh)
     params_sds = jax.eval_shape(
         lambda: transformer.init_params(cfg, jax.random.PRNGKey(0)))

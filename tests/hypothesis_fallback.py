@@ -1,0 +1,85 @@
+"""Tiny deterministic stand-in for ``hypothesis`` so the property tests run
+(with fixed seeded examples) on machines without the real package.
+
+Only the surface this repo's tests use is implemented: ``given``,
+``settings`` (incl. ``register_profile``/``load_profile`` no-ops) and the
+``integers`` / ``lists`` / ``tuples`` strategies with ``.map``/``.filter``.
+With the real hypothesis installed (see requirements-dev.txt) the test
+modules import it instead and get full shrinking/coverage.
+"""
+from __future__ import annotations
+
+import random
+
+MAX_EXAMPLES = 25
+_FILTER_TRIES = 200
+
+
+class _Strategy:
+    def __init__(self, gen):
+        self._gen = gen
+
+    def example(self, rng: random.Random):
+        return self._gen(rng)
+
+    def map(self, fn):
+        return _Strategy(lambda rng: fn(self._gen(rng)))
+
+    def filter(self, pred):
+        def gen(rng):
+            for _ in range(_FILTER_TRIES):
+                v = self._gen(rng)
+                if pred(v):
+                    return v
+            raise ValueError("hypothesis_fallback: filter predicate never "
+                             "satisfied in %d tries" % _FILTER_TRIES)
+        return _Strategy(gen)
+
+
+class strategies:  # noqa: N801 - mirrors `from hypothesis import strategies`
+    @staticmethod
+    def integers(min_value, max_value):
+        return _Strategy(lambda rng: rng.randint(min_value, max_value))
+
+    @staticmethod
+    def lists(elem: _Strategy, min_size=0, max_size=10):
+        return _Strategy(lambda rng: [
+            elem.example(rng)
+            for _ in range(rng.randint(min_size, max_size))])
+
+    @staticmethod
+    def tuples(*elems: _Strategy):
+        return _Strategy(lambda rng: tuple(e.example(rng) for e in elems))
+
+
+def given(*strats: _Strategy, **kw_strats: _Strategy):
+    def deco(fn):
+        def wrapper(*args, **kwargs):
+            rng = random.Random(0)  # deterministic across runs
+            for _ in range(MAX_EXAMPLES):
+                ex = [s.example(rng) for s in strats]
+                kex = {k: s.example(rng) for k, s in kw_strats.items()}
+                fn(*args, *ex, **kwargs, **kex)
+        # deliberately NOT functools.wraps: copying __wrapped__ would make
+        # pytest read the original signature and treat the injected
+        # example arguments as fixtures
+        wrapper.__name__ = fn.__name__
+        wrapper.__doc__ = fn.__doc__
+        return wrapper
+    return deco
+
+
+class settings:  # noqa: N801
+    def __init__(self, *a, **k):
+        pass
+
+    def __call__(self, fn):
+        return fn
+
+    @staticmethod
+    def register_profile(*a, **k):
+        pass
+
+    @staticmethod
+    def load_profile(*a, **k):
+        pass

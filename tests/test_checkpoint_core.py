@@ -1,12 +1,19 @@
 """S-C (remat) core: gradient equivalence, segment placement DP, policies."""
+import warnings
+
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # deterministic fixed-seed fallback (requirements-dev)
+    from hypothesis_fallback import given, settings, strategies as st
 
 from repro.core.checkpoint import (CheckpointConfig, checkpoint_sequential,
                                    optimal_segments, remat_scan)
+from repro.plan import RematPlan
 
 
 def _layer_fns(n, width=4):
@@ -79,10 +86,56 @@ class TestRematScan:
         """Odd layer counts degrade to the largest divisor, not an error."""
         w = jnp.stack([jnp.eye(2) * 0.9 for _ in range(5)])
         x = jnp.ones((2,))
-        out, _ = remat_scan(lambda c, wi: (jnp.tanh(c @ wi), None), x, w,
-                            config=CheckpointConfig(segment_size=2))
+        with pytest.warns(UserWarning, match="does not divide"):
+            out, _ = remat_scan(lambda c, wi: (jnp.tanh(c @ wi), None), x, w,
+                                config=CheckpointConfig(segment_size=2))
         ref, _ = jax.lax.scan(lambda c, wi: (jnp.tanh(c @ wi), None), x, w)
         np.testing.assert_allclose(out, ref, rtol=1e-6)
+
+    def test_indivisible_uses_largest_divisor_not_gcd(self):
+        """Regression: 48 layers @ segment 5 must degrade to 4 (largest
+        divisor <= 5), NOT gcd(48, 5) == 1 == per-layer remat."""
+        n = 48
+        w = jnp.stack([jnp.eye(2) * (0.9 + 0.001 * i) for i in range(n)])
+        x = jnp.ones((2,))
+        body = lambda c, wi: (jnp.tanh(c @ wi), None)  # noqa: E731
+        with pytest.warns(UserWarning, match=r"using largest divisor 4"):
+            out, _ = remat_scan(body, x, w,
+                                config=CheckpointConfig(segment_size=5))
+        ref, _ = jax.lax.scan(body, x, w)
+        np.testing.assert_allclose(out, ref, rtol=1e-6)
+        # a dividing segment_size stays silent
+        with warnings.catch_warnings():
+            warnings.simplefilter("error")
+            remat_scan(body, x, w, config=CheckpointConfig(segment_size=6))
+
+    @pytest.mark.parametrize("boundaries", [(), (3,), (2, 5), (1, 2, 3, 6)])
+    def test_plan_scan_matches_plain(self, boundaries):
+        """Non-uniform planned segments: values, ys stacking and grads all
+        match the plain scan."""
+        n = 7
+        w = jnp.stack([jnp.eye(3) * (0.9 + 0.01 * i) for i in range(n)])
+        x = jnp.ones((3,))
+
+        def body(c, wi):
+            return jnp.tanh(c @ wi), c.sum()
+
+        cfg = CheckpointConfig(plan=RematPlan(n, boundaries))
+        ref, ys_ref = jax.lax.scan(body, x, w)
+        out, ys = remat_scan(body, x, w, config=cfg)
+        np.testing.assert_allclose(ref, out, rtol=1e-6)
+        np.testing.assert_allclose(np.asarray(ys_ref), np.asarray(ys),
+                                   rtol=1e-6)
+        g0 = jax.grad(lambda x: jax.lax.scan(body, x, w)[0].sum())(x)
+        g1 = jax.grad(
+            lambda x: remat_scan(body, x, w, config=cfg)[0].sum())(x)
+        np.testing.assert_allclose(g0, g1, rtol=1e-6)
+
+    def test_plan_depth_mismatch_rejected(self):
+        w = jnp.stack([jnp.eye(2)] * 4)
+        with pytest.raises(ValueError, match="solved for 6 layers"):
+            remat_scan(lambda c, wi: (c @ wi, None), jnp.ones((2,)), w,
+                       config=CheckpointConfig(plan=RematPlan(6, (2,))))
 
 
 class TestOptimalSegments:

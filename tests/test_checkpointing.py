@@ -70,8 +70,8 @@ def test_missing_leaf_rejected(tmp_ckpt):
 def test_resharding_restore(tmp_ckpt):
     """Elastic scaling: save unsharded, restore onto a 1x1 mesh sharding."""
     from jax.sharding import NamedSharding, PartitionSpec as P
-    mesh = jax.make_mesh((1, 1), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    from repro.launch.mesh import make_mesh
+    mesh = make_mesh((1, 1), ("data", "model"))
     s = {"w": jnp.arange(64.0).reshape(8, 8)}
     tmp_ckpt.save(1, s)
     sh = {"w": NamedSharding(mesh, P(None, "model"))}

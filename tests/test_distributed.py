@@ -13,8 +13,8 @@ from repro.optim import adamw, compression
 
 
 def _mesh11():
-    return jax.make_mesh((1, 1), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    from repro.launch.mesh import make_mesh
+    return make_mesh((1, 1), ("data", "model"))
 
 
 class TestParamSpecs:
@@ -127,7 +127,8 @@ class TestCacheSpecs:
         cfg = configs.get_config("llama3-8b")
         cache = jax.eval_shape(
             lambda: transformer.init_cache(cfg, 128, 1024, quantized=True))
-        mesh = jax.sharding.AbstractMesh((16, 16), ("data", "model"))
+        from repro.launch.mesh import abstract_mesh
+        mesh = abstract_mesh((16, 16), ("data", "model"))
         specs = shd.cache_specs(cfg, cache, mesh)
         assert specs["k"][1] == "data"     # batch over DP
         # llama3 kv=8 heads don't divide model=16 -> sequence over model
@@ -137,6 +138,7 @@ class TestCacheSpecs:
         cfg = configs.get_config("hymba-1.5b")
         cache = jax.eval_shape(
             lambda: transformer.init_cache(cfg, 1, 2048, quantized=True))
-        mesh = jax.sharding.AbstractMesh((16, 16), ("data", "model"))
+        from repro.launch.mesh import abstract_mesh
+        mesh = abstract_mesh((16, 16), ("data", "model"))
         specs = shd.cache_specs(cfg, cache, mesh)
         assert specs["k"][3] == ("data", "model")  # sequence sharded

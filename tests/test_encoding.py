@@ -2,7 +2,11 @@
 SBS weight compliance — including hypothesis property tests."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # deterministic fixed-seed fallback (requirements-dev)
+    from hypothesis_fallback import given, settings, strategies as st
 
 from repro.core import encoding
 

@@ -34,8 +34,8 @@ def test_collective_parser_counts_and_widening():
 def test_memory_floor_positive_all_cells():
     from repro import configs
     from repro.launch.dryrun import _memory_floor_bytes
-    import jax
-    mesh = jax.sharding.AbstractMesh((16, 16), ("data", "model"))
+    from repro.launch.mesh import abstract_mesh
+    mesh = abstract_mesh((16, 16), ("data", "model"))
     for arch in configs.list_archs():
         cfg = configs.get_config(arch)
         for shape in configs.applicable_shapes(cfg):
