@@ -17,6 +17,9 @@
   plan_vs_uniform profile-driven RematPlan vs uniform even-split remat at
                   the same checkpoint count (repro.plan acceptance table;
                   writes BENCH_plan.json).
+  flash_fwd_bwd   trainable flash attention: fwd / fwd+bwd residual bytes
+                  (pallas custom_vjp vs jnp S^2 path) across S, and wall
+                  time in interpret mode (writes BENCH_flash.json).
 
 Prints ``name,us_per_call,derived`` CSV rows (plus derived metrics).
 """
@@ -305,6 +308,87 @@ def plan_vs_uniform():
     print(f"# wrote {os.path.normpath(path)}", flush=True)
 
 
+def flash_fwd_bwd():
+    """Trainable flash attention (ISSUE 2 acceptance): fwd-only vs fwd+bwd,
+    pallas custom_vjp vs the jnp O(S^2) path — residual ("peak between fwd
+    and bwd") bytes across S, plus wall time where the kernels execute on
+    CPU (interpret mode).  Writes BENCH_flash.json.
+
+    The pallas rows use ``backend="pallas"`` under ``jax.eval_shape`` (the
+    custom_vjp residual structure is backend-independent; abstract eval
+    never lowers to Mosaic), so the recorded bytes are exactly what a TPU
+    run would save between forward and backward.
+    """
+    import json
+    import os
+
+    from repro.kernels.flash import ops as flash_ops, ref as flash_ref
+
+    b, h, hkv, d = 1, 4, 2, 64
+    out: dict = {"shape": {"batch": b, "heads": h, "kv_heads": hkv,
+                           "head_dim": d}, "cases": {}}
+
+    def fwd_bytes(fn, *sds):
+        o = jax.eval_shape(fn, *sds)
+        return sum(x.size * x.dtype.itemsize
+                   for x in jax.tree_util.tree_leaves(o))
+
+    def fwd_bwd_bytes(fn, *sds):
+        # output + vjp residuals: everything alive between fwd and bwd
+        o = jax.eval_shape(lambda *a: jax.vjp(fn, *a), *sds)
+        return sum(x.size * x.dtype.itemsize
+                   for x in jax.tree_util.tree_leaves(o))
+
+    for s in (512, 1024, 2048):
+        sds = (jax.ShapeDtypeStruct((b, h, s, d), jnp.float32),
+               jax.ShapeDtypeStruct((b, hkv, s, d), jnp.float32),
+               jax.ShapeDtypeStruct((b, hkv, s, d), jnp.float32))
+        fns = {
+            "jnp": lambda q, k, v: flash_ref.flash_ref(q, k, v),
+            "pallas": lambda q, k, v: flash_ops.flash_attention(
+                q, k, v, backend="pallas"),
+        }
+        entry = {}
+        for name, fn in fns.items():
+            entry[name] = {
+                "fwd_bytes": fwd_bytes(fn, *sds),
+                "fwd_bwd_peak_bytes": fwd_bwd_bytes(fn, *sds),
+            }
+            _rows(f"flash_fwd_bwd_s{s}_{name}", 0.0,
+                  f"fwd_mb={entry[name]['fwd_bytes']/2**20:.1f},"
+                  f"fwd_bwd_mb={entry[name]['fwd_bwd_peak_bytes']/2**20:.1f}")
+        if s >= 1024:
+            assert entry["pallas"]["fwd_bwd_peak_bytes"] < \
+                entry["jnp"]["fwd_bwd_peak_bytes"], \
+                "flash custom_vjp must beat the jnp S^2 residuals"
+        out["cases"][f"s{s}"] = entry
+
+    # wall time at a CPU-executable size: interpret-mode kernels vs jnp
+    s = 256
+    rng = np.random.default_rng(3)
+    q = jnp.asarray(rng.normal(size=(b, h, s, d)).astype(np.float32))
+    k = jnp.asarray(rng.normal(size=(b, hkv, s, d)).astype(np.float32))
+    v = jnp.asarray(rng.normal(size=(b, hkv, s, d)).astype(np.float32))
+    timing = {}
+    for name, backend in (("jnp", "ref"), ("interpret", "interpret")):
+        fwd = jax.jit(lambda q, k, v, _b=backend: flash_ops.flash_attention(
+            q, k, v, backend=_b))
+        grad = jax.jit(jax.grad(
+            lambda q, k, v, _b=backend: jnp.sum(flash_ops.flash_attention(
+                q, k, v, backend=_b) ** 2), argnums=(0, 1, 2)))
+        us_f, _ = _timeit(fwd, q, k, v)
+        us_g, _ = _timeit(grad, q, k, v)
+        timing[name] = {"fwd_us": round(us_f, 1),
+                        "fwd_bwd_us": round(us_g, 1)}
+        _rows(f"flash_wall_s{s}_{name}", us_g, f"fwd_us={us_f:.0f}")
+    out["wall_s256"] = timing
+
+    path = os.path.join(os.path.dirname(__file__), "..", "BENCH_flash.json")
+    with open(path, "w") as f:
+        json.dump(out, f, indent=1, sort_keys=True)
+    print(f"# wrote {os.path.normpath(path)}", flush=True)
+
+
 def tbl_codec():
     """Codec throughput + ratios (paper claims up-to 16x passage saving)."""
     from repro.core import encoding
@@ -390,7 +474,7 @@ def tbl_compression():
 
 
 BENCHES = [tbl_codec, tbl_pipeline, tbl_compression, fig8_memory,
-           fig10_pipelines, plan_vs_uniform, fig9_time_acc]
+           fig10_pipelines, plan_vs_uniform, flash_fwd_bwd, fig9_time_acc]
 
 
 def main() -> None:

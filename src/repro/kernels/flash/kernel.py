@@ -1,21 +1,35 @@
-"""Pallas TPU flash-attention (prefill/training forward).
+"""Pallas TPU flash-attention: forward AND backward (trainable).
 
-Classic tiling: grid (B*H, nQ, nK) with the KV axis innermost (sequential
-on TPU), online-softmax running stats in VMEM scratch per Q tile.  GQA is
-handled in the BlockSpec index maps (KV tiles load from head h // group).
+Forward — classic tiling: grid (B*H, nQ, nK) with the KV axis innermost
+(sequential on TPU), online-softmax running stats in VMEM scratch per Q
+tile.  GQA is handled in the BlockSpec index maps (KV tiles load from head
+h // group).  The forward also emits the per-row softmax stats (m, l) so
+the backward can recompute probabilities without the (S x S) matrix.
 
-MXU shapes: (BQ, D) x (D, BK) and (BQ, BK) x (BK, D) with BQ = BK = 128
-and D in {64, 128} — every contraction is lane-aligned.
+Backward — the Chen et al. recompute-over-store trade applied inside the
+attention op, split into three kernels:
 
-VMEM per step (BQ=BK=128, D=128, f32 compute):
-  q tile 64 KiB + k,v tiles 128 KiB + scores 64 KiB + acc/m/l ~66 KiB
-  (double-buffered well under a v5e core's ~16 MiB).
+  * ``_bwd_delta_kernel``  D_i = rowsum(dO_i * O_i), grid (B*H, nQ) — the
+    softmax-backward correction term, one f32 per row.
+  * ``_bwd_dq_kernel``     grid (B*H, nQ, nK), KV innermost: recompute
+    P = exp(S - lse) from (m, l), dP = dO V^T, dS = P (dP - D), and
+    accumulate dQ += dS K * scale in VMEM scratch.
+  * ``_bwd_dkv_kernel``    grid (B*Hkv, nK, group, nQ), Q innermost with
+    the GQA group as the next-inner axis so dK/dV accumulate over every
+    query head sharing the KV head before the single output write:
+    dV += P^T dO, dK += dS^T Q * scale.
 
-Causal masking compares absolute positions built from the grid indices;
-whole-tile-masked KV steps still execute (Pallas grids are dense) but the
-mask zeroes their contribution — a ~2x FLOP overhead the scheduler would
-claw back with a custom grid order (left as future work; the dry-run costs
-the jnp path anyway).
+Residuals between fwd and bwd are q, k, v, o, m, l — O(S*D) per head, not
+O(S^2); the score/probability matrices are recomputed tile-by-tile (an
+extra ~2x of the forward QK^T FLOPs across dQ+dKV, the flash trade).
+
+MXU shapes: every contraction is (128, D) x (D, 128) or (128, 128) x
+(128, D) with D in {64, 128} — lane-aligned (ops.py guards other shapes).
+
+Causal/window masking compares absolute positions built from grid indices;
+whole-tile-masked steps still execute (Pallas grids are dense) but their
+contribution is zeroed.  ``kv_len`` masks padded KV columns so ops.py's
+length padding is safe for non-causal attention too.
 """
 from __future__ import annotations
 
@@ -31,8 +45,26 @@ DEFAULT_BQ = 128
 DEFAULT_BK = 128
 
 
-def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
-                  sm_scale, n_k, bq, bk, causal, window):
+def _position_mask(qi, ki, *, bq, bk, causal, window, kv_len, s_len):
+    """(BQ, BK) bool validity mask from grid indices, or None if trivial."""
+    if not causal and kv_len >= s_len:
+        return None
+    q_pos = qi * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+    k_pos = ki * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+    ok = k_pos < kv_len
+    if causal:
+        ok &= q_pos >= k_pos
+        if window > 0:
+            ok &= (q_pos - k_pos) < window
+    return ok
+
+
+# ---------------------------------------------------------------------------
+# Forward.
+# ---------------------------------------------------------------------------
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_out_ref, l_out_ref,
+                  m_ref, l_ref, acc_ref, *,
+                  sm_scale, n_k, bq, bk, causal, window, kv_len, s_len):
     qi = pl.program_id(1)
     ki = pl.program_id(2)
 
@@ -47,12 +79,9 @@ def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
     v = v_ref[...][0].astype(jnp.float32)
     s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * sm_scale
 
-    if causal:
-        q_pos = qi * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
-        k_pos = ki * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
-        ok = q_pos >= k_pos
-        if window > 0:
-            ok &= (q_pos - k_pos) < window
+    ok = _position_mask(qi, ki, bq=bq, bk=bk, causal=causal, window=window,
+                        kv_len=kv_len, s_len=s_len)
+    if ok is not None:
         s = jnp.where(ok, s, NEG_INF)
 
     m_prev = m_ref[...]
@@ -68,18 +97,27 @@ def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
     def _done():
         denom = jnp.maximum(l_ref[...], 1e-30)
         o_ref[...] = (acc_ref[...] / denom[:, None])[None].astype(o_ref.dtype)
+        m_out_ref[...] = m_ref[...][None]
+        l_out_ref[...] = l_ref[...][None]
 
 
 @functools.partial(jax.jit, static_argnames=(
-    "causal", "window", "sm_scale", "bq", "bk", "interpret"))
-def flash_attention_pallas(q, k, v, *, causal: bool = True, window: int = 0,
-                           sm_scale: float | None = None,
-                           bq: int = DEFAULT_BQ, bk: int = DEFAULT_BK,
-                           interpret: bool = False):
+    "causal", "window", "sm_scale", "bq", "bk", "kv_len", "interpret"))
+def flash_attention_fwd_pallas(q, k, v, *, causal: bool = True,
+                               window: int = 0,
+                               sm_scale: float | None = None,
+                               bq: int = DEFAULT_BQ, bk: int = DEFAULT_BK,
+                               kv_len: int | None = None,
+                               interpret: bool = False):
     """q: (BH, S, D); k, v: (BHkv, S, D) with BH = BHkv * group.
 
+    Returns (o, m, l): output plus the per-row online-softmax stats
+    (running max, running denominator), both (BH, S) f32 — the residuals
+    the backward kernels recompute probabilities from.
+
     Flat batch*head layout; the wrapper in ops.py folds (B, H) and GQA.
-    S % bq == 0 and S % bk == 0 (ops.py pads).
+    S % bq == 0 and S % bk == 0 (ops.py pads); ``kv_len`` (< S when ops.py
+    padded) masks the padded KV columns.
     """
     bh, s_len, d = q.shape
     bhkv = k.shape[0]
@@ -89,18 +127,28 @@ def flash_attention_pallas(q, k, v, *, causal: bool = True, window: int = 0,
     assert s_len % bq == 0 and s_len % bk == 0, (s_len, bq, bk)
     n_q, n_k = s_len // bq, s_len // bk
     scale = sm_scale if sm_scale is not None else d ** -0.5
+    kv_len = s_len if kv_len is None else kv_len
 
     return pl.pallas_call(
         functools.partial(_flash_kernel, sm_scale=scale, n_k=n_k, bq=bq,
-                          bk=bk, causal=causal, window=window),
+                          bk=bk, causal=causal, window=window, kv_len=kv_len,
+                          s_len=s_len),
         grid=(bh, n_q, n_k),
         in_specs=[
             pl.BlockSpec((1, bq, d), lambda h, i, j: (h, i, 0)),
             pl.BlockSpec((1, bk, d), lambda h, i, j, g=group: (h // g, j, 0)),
             pl.BlockSpec((1, bk, d), lambda h, i, j, g=group: (h // g, j, 0)),
         ],
-        out_specs=pl.BlockSpec((1, bq, d), lambda h, i, j: (h, i, 0)),
-        out_shape=jax.ShapeDtypeStruct((bh, s_len, d), q.dtype),
+        out_specs=[
+            pl.BlockSpec((1, bq, d), lambda h, i, j: (h, i, 0)),
+            pl.BlockSpec((1, bq), lambda h, i, j: (h, i)),
+            pl.BlockSpec((1, bq), lambda h, i, j: (h, i)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((bh, s_len, d), q.dtype),
+            jax.ShapeDtypeStruct((bh, s_len), jnp.float32),
+            jax.ShapeDtypeStruct((bh, s_len), jnp.float32),
+        ],
         scratch_shapes=[
             pltpu.VMEM((bq,), jnp.float32),        # running max
             pltpu.VMEM((bq,), jnp.float32),        # running denom
@@ -108,3 +156,183 @@ def flash_attention_pallas(q, k, v, *, causal: bool = True, window: int = 0,
         ],
         interpret=interpret,
     )(q, k, v)
+
+
+# ---------------------------------------------------------------------------
+# Backward.
+# ---------------------------------------------------------------------------
+def _bwd_delta_kernel(o_ref, do_ref, delta_ref):
+    """D = rowsum(dO * O): the softmax-backward correction, (BQ,) f32."""
+    o = o_ref[...][0].astype(jnp.float32)
+    do = do_ref[...][0].astype(jnp.float32)
+    delta_ref[...] = (o * do).sum(axis=-1)[None]
+
+
+def _recompute_probs(q, k, m, l, ok, *, sm_scale):
+    """P = exp(S - lse) from saved stats; masked entries exactly zero."""
+    s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * sm_scale
+    lse = m + jnp.log(jnp.maximum(l, 1e-30))
+    p = jnp.exp(s - lse[:, None])
+    if ok is not None:
+        p = jnp.where(ok, p, 0.0)
+    return p
+
+
+def _bwd_dq_kernel(q_ref, k_ref, v_ref, do_ref, m_ref, l_ref, delta_ref,
+                   dq_ref, acc_ref, *,
+                   sm_scale, n_k, bq, bk, causal, window, kv_len, s_len):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros(acc_ref.shape, jnp.float32)
+
+    q = q_ref[...][0].astype(jnp.float32)                  # (BQ, D)
+    k = k_ref[...][0].astype(jnp.float32)                  # (BK, D)
+    v = v_ref[...][0].astype(jnp.float32)
+    do = do_ref[...][0].astype(jnp.float32)
+    m = m_ref[...][0]
+    l = l_ref[...][0]
+    delta = delta_ref[...][0]
+
+    ok = _position_mask(qi, ki, bq=bq, bk=bk, causal=causal, window=window,
+                        kv_len=kv_len, s_len=s_len)
+    p = _recompute_probs(q, k, m, l, ok, sm_scale=sm_scale)      # (BQ, BK)
+    dp = jnp.dot(do, v.T, preferred_element_type=jnp.float32)    # (BQ, BK)
+    ds = p * (dp - delta[:, None])
+    acc_ref[...] += jnp.dot(ds, k, preferred_element_type=jnp.float32)
+
+    @pl.when(ki == n_k - 1)
+    def _done():
+        dq_ref[...] = (acc_ref[...] * sm_scale)[None].astype(dq_ref.dtype)
+
+
+def _bwd_dkv_kernel(q_ref, k_ref, v_ref, do_ref, m_ref, l_ref, delta_ref,
+                    dk_ref, dv_ref, dk_acc, dv_acc, *,
+                    sm_scale, n_q, group, bq, bk, causal, window, kv_len,
+                    s_len):
+    # grid (B*Hkv, nK, group, nQ): Q tiles innermost, then the GQA group so
+    # dK/dV accumulate over every query head sharing this KV head before
+    # the single output write.
+    ki = pl.program_id(1)
+    gi = pl.program_id(2)
+    qi = pl.program_id(3)
+
+    @pl.when((gi == 0) & (qi == 0))
+    def _init():
+        dk_acc[...] = jnp.zeros(dk_acc.shape, jnp.float32)
+        dv_acc[...] = jnp.zeros(dv_acc.shape, jnp.float32)
+
+    q = q_ref[...][0].astype(jnp.float32)                  # (BQ, D)
+    k = k_ref[...][0].astype(jnp.float32)                  # (BK, D)
+    v = v_ref[...][0].astype(jnp.float32)
+    do = do_ref[...][0].astype(jnp.float32)
+    m = m_ref[...][0]
+    l = l_ref[...][0]
+    delta = delta_ref[...][0]
+
+    ok = _position_mask(qi, ki, bq=bq, bk=bk, causal=causal, window=window,
+                        kv_len=kv_len, s_len=s_len)
+    p = _recompute_probs(q, k, m, l, ok, sm_scale=sm_scale)      # (BQ, BK)
+    dv_acc[...] += jnp.dot(p.T, do, preferred_element_type=jnp.float32)
+    dp = jnp.dot(do, v.T, preferred_element_type=jnp.float32)
+    ds = p * (dp - delta[:, None])
+    dk_acc[...] += jnp.dot(ds.T, q, preferred_element_type=jnp.float32)
+
+    @pl.when((gi == group - 1) & (qi == n_q - 1))
+    def _done():
+        dk_ref[...] = (dk_acc[...] * sm_scale)[None].astype(dk_ref.dtype)
+        dv_ref[...] = dv_acc[...][None].astype(dv_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "causal", "window", "sm_scale", "bq", "bk", "kv_len", "interpret"))
+def flash_attention_bwd_pallas(q, k, v, o, m, l, do, *, causal: bool = True,
+                               window: int = 0,
+                               sm_scale: float | None = None,
+                               bq: int = DEFAULT_BQ, bk: int = DEFAULT_BK,
+                               kv_len: int | None = None,
+                               interpret: bool = False):
+    """Backward from saved residuals: (dq, dk, dv).
+
+    q, do: (BH, S, D); k, v: (BHkv, S, D); o: (BH, S, D); m, l: (BH, S)
+    f32 stats from ``flash_attention_fwd_pallas``.  The score matrix is
+    recomputed tile-by-tile in both the dQ and dKV kernels — residual
+    memory stays O(S*D).
+    """
+    bh, s_len, d = q.shape
+    bhkv = k.shape[0]
+    group = bh // bhkv
+    bq = min(bq, s_len)
+    bk = min(bk, s_len)
+    assert s_len % bq == 0 and s_len % bk == 0, (s_len, bq, bk)
+    n_q, n_k = s_len // bq, s_len // bk
+    scale = sm_scale if sm_scale is not None else d ** -0.5
+    kv_len = s_len if kv_len is None else kv_len
+    mask_kw = dict(causal=causal, window=window, kv_len=kv_len, s_len=s_len)
+
+    delta = pl.pallas_call(
+        _bwd_delta_kernel,
+        grid=(bh, n_q),
+        in_specs=[pl.BlockSpec((1, bq, d), lambda h, i: (h, i, 0)),
+                  pl.BlockSpec((1, bq, d), lambda h, i: (h, i, 0))],
+        out_specs=pl.BlockSpec((1, bq), lambda h, i: (h, i)),
+        out_shape=jax.ShapeDtypeStruct((bh, s_len), jnp.float32),
+        interpret=interpret,
+    )(o, do)
+
+    dq = pl.pallas_call(
+        functools.partial(_bwd_dq_kernel, sm_scale=scale, n_k=n_k, bq=bq,
+                          bk=bk, **mask_kw),
+        grid=(bh, n_q, n_k),
+        in_specs=[
+            pl.BlockSpec((1, bq, d), lambda h, i, j: (h, i, 0)),
+            pl.BlockSpec((1, bk, d), lambda h, i, j, g=group: (h // g, j, 0)),
+            pl.BlockSpec((1, bk, d), lambda h, i, j, g=group: (h // g, j, 0)),
+            pl.BlockSpec((1, bq, d), lambda h, i, j: (h, i, 0)),
+            pl.BlockSpec((1, bq), lambda h, i, j: (h, i)),
+            pl.BlockSpec((1, bq), lambda h, i, j: (h, i)),
+            pl.BlockSpec((1, bq), lambda h, i, j: (h, i)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, d), lambda h, i, j: (h, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((bh, s_len, d), q.dtype),
+        scratch_shapes=[pltpu.VMEM((bq, d), jnp.float32)],
+        interpret=interpret,
+    )(q, k, v, do, m, l, delta)
+
+    def _q_head(hk, j, gi, i, g=group):
+        del j, i
+        return hk * g + gi
+
+    dk, dv = pl.pallas_call(
+        functools.partial(_bwd_dkv_kernel, sm_scale=scale, n_q=n_q,
+                          group=group, bq=bq, bk=bk, **mask_kw),
+        grid=(bhkv, n_k, group, n_q),
+        in_specs=[
+            pl.BlockSpec((1, bq, d),
+                         lambda hk, j, gi, i: (_q_head(hk, j, gi, i), i, 0)),
+            pl.BlockSpec((1, bk, d), lambda hk, j, gi, i: (hk, j, 0)),
+            pl.BlockSpec((1, bk, d), lambda hk, j, gi, i: (hk, j, 0)),
+            pl.BlockSpec((1, bq, d),
+                         lambda hk, j, gi, i: (_q_head(hk, j, gi, i), i, 0)),
+            pl.BlockSpec((1, bq),
+                         lambda hk, j, gi, i: (_q_head(hk, j, gi, i), i)),
+            pl.BlockSpec((1, bq),
+                         lambda hk, j, gi, i: (_q_head(hk, j, gi, i), i)),
+            pl.BlockSpec((1, bq),
+                         lambda hk, j, gi, i: (_q_head(hk, j, gi, i), i)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, bk, d), lambda hk, j, gi, i: (hk, j, 0)),
+            pl.BlockSpec((1, bk, d), lambda hk, j, gi, i: (hk, j, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((bhkv, s_len, d), k.dtype),
+            jax.ShapeDtypeStruct((bhkv, s_len, d), v.dtype),
+        ],
+        scratch_shapes=[pltpu.VMEM((bk, d), jnp.float32),
+                        pltpu.VMEM((bk, d), jnp.float32)],
+        interpret=interpret,
+    )(q, k, v, do, m, l, delta)
+    return dq, dk, dv

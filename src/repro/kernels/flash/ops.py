@@ -1,15 +1,140 @@
-"""Public flash-attention op: (B, H, S, D) GQA layout, backend dispatch."""
+"""Public flash-attention op: (B, H, S, D) GQA layout, backend dispatch.
+
+One differentiable entry point for all three backends:
+
+  * ``ref``        exact jnp softmax (``ref.flash_ref``), differentiated by
+                   plain jax autodiff — the gradient oracle.  O(S^2)
+                   residuals.
+  * ``interpret``  the Pallas kernels run through the Pallas interpreter —
+                   same tiling/masking semantics as TPU, runs anywhere.
+  * ``pallas``     compiled Mosaic TPU kernels.
+
+For ``interpret``/``pallas`` the op is a ``jax.custom_vjp``: the forward
+saves residuals (q, k, v, o, m, l) — O(S*D) per head instead of the
+O(S^2) probability matrix — and the backward runs the recompute-based
+Pallas kernels (``kernel.flash_attention_bwd_pallas``), so
+``jax.grad`` through ``attn_backend="pallas"`` is legal and memory-cheap.
+
+Shapes the compiled Mosaic pipeline cannot lower (head_dim not in
+{64, 128}, sequences shorter than one 128-lane block) fall back to the
+``ref`` path with a one-time warning instead of crashing.
+"""
 from __future__ import annotations
+
+import functools
+import warnings
+from typing import NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
 
 from repro.kernels.flash import kernel, ref
 
+SUPPORTED_HEAD_DIMS = (64, 128)
+_WARNED_FALLBACKS: set[str] = set()
 
+
+class _FlashSpec(NamedTuple):
+    """Hashable static config threaded through the custom_vjp as a
+    nondiff arg (causal/window/scale/kv_len are compile-time for the
+    kernels; ``interpret`` picks the Pallas interpreter vs Mosaic)."""
+
+    causal: bool
+    window: int
+    sm_scale: Optional[float]
+    kv_len: int
+    interpret: bool
+
+
+def unsupported_reason(q, k, v, *, backend: str) -> Optional[str]:
+    """Why the *compiled* Mosaic kernel can't run this shape (None = fine).
+
+    Only ``backend="pallas"`` is constrained: the interpreter executes any
+    shape, and ``ref`` is pure jnp.  (Indivisible GQA head counts are an
+    invalid *input* on every backend — ``flash_attention`` raises rather
+    than falls back.)  Padding in ``flash_attention`` already rounds S up
+    to a multiple of the 128 block for S >= 128, so the sequence-length
+    guard only rejects sub-block sequences (which would lower to
+    non-lane-aligned tiles Mosaic refuses).
+    """
+    if backend != "pallas":
+        return None
+    d = q.shape[-1]
+    s = q.shape[2]
+    if d not in SUPPORTED_HEAD_DIMS:
+        return (f"head_dim={d} is not MXU lane-aligned (supported: "
+                f"{SUPPORTED_HEAD_DIMS}) for q{tuple(q.shape)}")
+    if s < kernel.DEFAULT_BQ and s % kernel.DEFAULT_BQ:
+        return (f"sequence length {s} of q{tuple(q.shape)} is not a "
+                f"multiple of the flash block size {kernel.DEFAULT_BQ}; "
+                f"sub-block tiles are not lane-aligned")
+    return None
+
+
+def _warn_fallback_once(reason: str) -> None:
+    if reason not in _WARNED_FALLBACKS:
+        _WARNED_FALLBACKS.add(reason)
+        warnings.warn(
+            f"flash_attention: falling back to backend='ref' — {reason}",
+            stacklevel=3)
+
+
+# ---------------------------------------------------------------------------
+# custom_vjp core (flat (B*H, S, D) layout; padding/GQA folding outside).
+# ---------------------------------------------------------------------------
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0,))
+def _flash(spec: _FlashSpec, q, k, v):
+    o, _, _ = kernel.flash_attention_fwd_pallas(
+        q, k, v, causal=spec.causal, window=spec.window,
+        sm_scale=spec.sm_scale, kv_len=spec.kv_len,
+        interpret=spec.interpret)
+    return o
+
+
+def _flash_fwd(spec: _FlashSpec, q, k, v):
+    o, m, l = kernel.flash_attention_fwd_pallas(
+        q, k, v, causal=spec.causal, window=spec.window,
+        sm_scale=spec.sm_scale, kv_len=spec.kv_len,
+        interpret=spec.interpret)
+    return o, (q, k, v, o, m, l)          # O(S*D) residuals + f32 stat rows
+
+
+def _flash_bwd(spec: _FlashSpec, residuals, do):
+    q, k, v, o, m, l = residuals
+    dq, dk, dv = kernel.flash_attention_bwd_pallas(
+        q, k, v, o, m, l, do, causal=spec.causal, window=spec.window,
+        sm_scale=spec.sm_scale, kv_len=spec.kv_len,
+        interpret=spec.interpret)
+    return dq, dk, dv
+
+
+_flash.defvjp(_flash_fwd, _flash_bwd)
+
+
+# ---------------------------------------------------------------------------
+# Public op.
+# ---------------------------------------------------------------------------
 def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
                     sm_scale: float | None = None, backend: str = "ref"):
-    """q: (B, H, S, D); k, v: (B, Hkv, S, D) -> (B, H, S, D)."""
+    """q: (B, H, S, D); k, v: (B, Hkv, S, D) -> (B, H, S, D).
+
+    Differentiable on every backend; ``interpret``/``pallas`` use the
+    recompute-based Pallas backward via ``jax.custom_vjp``.
+    """
+    if backend not in ("ref", "interpret", "pallas"):
+        raise ValueError(f"flash_attention: unknown backend {backend!r} "
+                         "(expected 'ref', 'interpret' or 'pallas')")
+    if k.shape[1] == 0 or q.shape[1] % k.shape[1]:
+        raise ValueError(
+            f"flash_attention: n_heads={q.shape[1]} must be a non-zero "
+            f"multiple of n_kv={k.shape[1]} (GQA) for q{tuple(q.shape)}, "
+            f"k{tuple(k.shape)} — every backend groups query heads over "
+            f"KV heads")
+    if backend != "ref":
+        reason = unsupported_reason(q, k, v, backend=backend)
+        if reason is not None:
+            _warn_fallback_once(reason)
+            backend = "ref"
     if backend == "ref":
         return ref.flash_ref(q, k, v, causal=causal, window=window,
                              sm_scale=sm_scale)
@@ -20,9 +145,11 @@ def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
         q = jnp.pad(q, ((0, 0), (0, 0), (0, pad), (0, 0)))
         k = jnp.pad(k, ((0, 0), (0, 0), (0, pad), (0, 0)))
         v = jnp.pad(v, ((0, 0), (0, 0), (0, pad), (0, 0)))
-    out = kernel.flash_attention_pallas(
-        q.reshape(b * h, s + pad, d), k.reshape(b * hkv, s + pad, d),
-        v.reshape(b * hkv, s + pad, d), causal=causal, window=window,
-        sm_scale=sm_scale, interpret=(backend == "interpret"))
+    spec = _FlashSpec(causal=bool(causal), window=int(window),
+                      sm_scale=sm_scale, kv_len=s,
+                      interpret=(backend == "interpret"))
+    out = _flash(spec, q.reshape(b * h, s + pad, d),
+                 k.reshape(b * hkv, s + pad, d),
+                 v.reshape(b * hkv, s + pad, d))
     out = out.reshape(b, h, s + pad, d)
     return out[:, :, :s] if pad else out

@@ -249,14 +249,26 @@ def dryrun_cell(arch: str, shape_name: str, mesh, *, verbose=True,
             from repro.train.train_step import microbatch_specs
             batch_sds = {"tokens": jax.ShapeDtypeStruct(
                 (sh["batch"], sh["seq"]), jnp.int32)}
-            prof = plan_mod.profile_transformer(
-                cfg, microbatch_specs(batch_sds, accum=accum, mesh=mesh))
+            mb_sds = microbatch_specs(batch_sds, accum=accum, mesh=mesh)
+            prof = plan_mod.profile_transformer(cfg, mb_sds)
             per_block = plan_mod.RematPlan.uniform(cfg.n_layers, cfg.n_layers)
             rep = plan_mod.plan_report(prof, per_block)
+            # resolved attention backend + what it costs the backward: the
+            # jnp path budgets O(S^2) probability residuals, the flash
+            # custom_vjp budgets O(S*D) stats + known recompute FLOPs
+            mb_b, mb_s = mb_sds["tokens"].shape
+            cfg_flash = dc.replace(cfg, attn_backend="pallas")
+            flash_prof = plan_mod.profile_transformer(cfg_flash, mb_sds)
             plan_info = {
                 "plan_peak_bytes": rep["peak_bytes"],
                 "plan_no_remat_bytes": rep["no_remat_bytes"],
                 "plan_n_segments": rep["n_segments"],
+                "attn_backend": cfg.attn_backend,
+                "attn_resid_bytes": prof.total_resid_bytes(),
+                "flash_resid_bytes": flash_prof.total_resid_bytes(),
+                "flash_bwd_recompute_flops": sum(
+                    plan_mod.flash_bwd_recompute_flops(cfg_flash, mb_b,
+                                                       mb_s)),
             }
         except Exception as e:  # noqa: BLE001 - advisory, never fail a cell
             plan_info = {"plan_error": f"{type(e).__name__}: {e}"[:200]}
@@ -305,6 +317,11 @@ def dryrun_cell(arch: str, shape_name: str, mesh, *, verbose=True,
                   f"planned (per-block remat) vs {result['temp_bytes_per_device']/2**30:.2f} GiB "
                   f"compiled temp (no-remat would be "
                   f"{result['plan_no_remat_bytes']/2**30:.2f} GiB)")
+            print(f"  attn: backend={result['attn_backend']} "
+                  f"resid {result['attn_resid_bytes']/2**20:.1f} MiB "
+                  f"(flash would be {result['flash_resid_bytes']/2**20:.1f} "
+                  f"MiB + {result['flash_bwd_recompute_flops']/1e9:.1f} "
+                  f"recompute GFLOPs)")
         print(f"  useful-FLOP fraction {result['useful_flops_frac']:.2f}")
         sys.stdout.flush()
     return result

@@ -126,6 +126,18 @@ def run(args):
     print(f"mesh: {describe(mesh)}")
     cfg = configs.smoke_config(args.arch) if args.smoke \
         else configs.get_config(args.arch)
+    if args.attn_backend is not None:
+        cfg = dataclasses.replace(cfg, attn_backend=args.attn_backend)
+    if cfg.attn_backend == "jnp":
+        print("attn backend: jnp")
+    else:
+        from repro.plan import flash_training_eligible
+        eligible = flash_training_eligible(cfg, args.seq)
+        print(f"attn backend: {cfg.attn_backend}"
+              + (" (flash custom_vjp: O(S*D) attention residuals)"
+                 if eligible else
+                 " — flash INELIGIBLE for this arch/shape, jnp path "
+                 "(O(S^2) residuals) will run"))
 
     batch_sds = {
         "tokens": jax.ShapeDtypeStruct((args.batch, args.seq), jnp.int32),
@@ -234,6 +246,13 @@ def main():
     ap.add_argument("--accum", type=int, default=1)
     ap.add_argument("--policy", default="bf16",
                     choices=["full", "bf16", "fp16", "bf16_params"])
+    ap.add_argument("--attn-backend", default=None,
+                    choices=["jnp", "interpret", "pallas"],
+                    help="attention kernel override (default: the arch "
+                         "config's backend): jnp (O(S^2) residuals), or "
+                         "the flash kernel via the Pallas interpreter / "
+                         "compiled Mosaic (trainable custom_vjp, O(S*D) "
+                         "residuals)")
     ap.add_argument("--remat", default="on", choices=["on", "off", "auto"],
                     help="auto: profile-driven RematPlan (see repro.plan)")
     ap.add_argument("--mem-budget-mb", type=int, default=0,

@@ -117,8 +117,11 @@ def attn_block(p, x, cfg, *, positions, window: int = 0, layer_window=None,
     w = window if layer_window is None else layer_window
     if (cfg.attn_backend != "jnp" and causal and isinstance(w, int)
             and positions.ndim < 3):
-        # Pallas flash kernel (prefill/training hot path); falls back to the
-        # jnp paths for traced per-layer windows (hybrid scan) and M-RoPE
+        # Pallas flash kernel (prefill/training hot path) — differentiable
+        # via its custom_vjp with O(S*D) residuals, so this branch is legal
+        # under jax.grad.  Falls back to the jnp paths for traced per-layer
+        # windows (hybrid scan) and M-RoPE; unsupported shapes fall back to
+        # ref inside the op (one-time warning).
         from repro.kernels.flash import ops as flash_ops
         out = flash_ops.flash_attention(
             jnp.swapaxes(q, 1, 2), jnp.swapaxes(k, 1, 2),

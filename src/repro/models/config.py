@@ -73,11 +73,19 @@ class ModelConfig:
     tie_embeddings: bool = False
     subquadratic: bool = False    # eligible for long_500k shapes
     norm_bf16_grad: bool = False  # perf: bf16 cotangent out of RMSNorm
-    attn_backend: str = "jnp"     # jnp | interpret | pallas (kernels/flash)
+    # jnp | interpret | pallas — kernels/flash is fwd+bwd differentiable
+    # (custom_vjp with O(S*D) residuals), so "pallas" is legal for training
+    attn_backend: str = "jnp"
+
+    ATTN_BACKENDS = ("jnp", "interpret", "pallas")
 
     def __post_init__(self):
         if self.head_dim == 0 and self.n_heads:
             object.__setattr__(self, "head_dim", self.d_model // self.n_heads)
+        if self.attn_backend not in self.ATTN_BACKENDS:
+            raise ValueError(
+                f"attn_backend={self.attn_backend!r} not in "
+                f"{self.ATTN_BACKENDS}")
 
     @property
     def padded_vocab(self) -> int:

@@ -345,10 +345,19 @@ def forward(params, cfg: ModelConfig, batch: dict, *,
         # per-layer projections — so pass encoder output and project inside).
         enc_kv = enc_out
 
-    windows = layer_windows(cfg)
+    # Uniform window schedules (no per-layer overrides) pass the window as
+    # a STATIC python int so attn_block can dispatch to the flash kernel
+    # (its gate requires a non-traced window); hybrid archs with
+    # global-layer overrides scan the (L,) window array and take the jnp
+    # attention path — the documented fallback.
+    static_window = int(cfg.window) if not cfg.global_layers else None
+    windows = None if static_window is not None else layer_windows(cfg)
 
     def body(carry, xs):
-        p_layer, win = xs
+        if static_window is None:
+            p_layer, win = xs
+        else:
+            p_layer, win = xs, static_window
         ekv = None
         if enc_kv is not None:
             hkv, hd = cfg.n_kv, cfg.head_dim
@@ -364,8 +373,10 @@ def forward(params, cfg: ModelConfig, batch: dict, *,
         return out, (aux, entry)
 
     x, (auxes, entries) = remat_scan(
-        body, x, (params["blocks"], windows), config=remat,
-        unroll=scan_unroll)
+        body, x,
+        params["blocks"] if static_window is not None
+        else (params["blocks"], windows),
+        config=remat, unroll=scan_unroll)
     x = rms_norm(x, params["final_norm"], cfg.norm_eps, bf16_grad=cfg.norm_bf16_grad)
     aux_out = {"moe_aux": jnp.mean(auxes) if cfg.moe is not None else 0.0}
     if build_cache:

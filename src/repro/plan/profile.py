@@ -34,22 +34,41 @@ from repro.plan.solver import (RematPlan, budget_boundaries,
 
 @dataclasses.dataclass(frozen=True)
 class ChainProfile:
-    """Per-layer costs of a sequential chain (index i = layer i's output)."""
+    """Per-layer costs of a sequential chain (index i = layer i's output).
+
+    ``resid_bytes`` (optional, same length) are per-layer BACKWARD
+    residuals: bytes live while that layer's segment backward runs, beyond
+    the checkpointable carry — e.g. the jnp attention path's f32 (S x ctx)
+    probability matrix, or the flash custom_vjp path's O(S*D) softmax
+    stats.  They widen the planner's live-set term but are never stored at
+    checkpoint boundaries.
+    """
 
     act_bytes: tuple[int, ...]
     flops: tuple[float, ...]
     labels: tuple[str, ...] = ()
+    resid_bytes: tuple[int, ...] = ()
 
     def __post_init__(self):
         if len(self.act_bytes) != len(self.flops):
             raise ValueError("act_bytes and flops length mismatch")
+        if self.resid_bytes and len(self.resid_bytes) != len(self.act_bytes):
+            raise ValueError("resid_bytes and act_bytes length mismatch")
 
     @property
     def n_layers(self) -> int:
         return len(self.act_bytes)
 
+    @property
+    def resid_or_none(self) -> "tuple[int, ...] | None":
+        """What the solvers take: None when no residuals were profiled."""
+        return self.resid_bytes or None
+
     def total_bytes(self) -> int:
         return int(sum(self.act_bytes))
+
+    def total_resid_bytes(self) -> int:
+        return int(sum(self.resid_bytes))
 
     def total_flops(self) -> float:
         return float(sum(self.flops))
@@ -57,13 +76,15 @@ class ChainProfile:
     def to_json(self) -> str:
         return json.dumps({"act_bytes": list(self.act_bytes),
                            "flops": list(self.flops),
-                           "labels": list(self.labels)})
+                           "labels": list(self.labels),
+                           "resid_bytes": list(self.resid_bytes)})
 
     @classmethod
     def from_json(cls, text: str) -> "ChainProfile":
         d = json.loads(text)
         return cls(tuple(d["act_bytes"]), tuple(d["flops"]),
-                   tuple(d.get("labels", ())))
+                   tuple(d.get("labels", ())),
+                   tuple(d.get("resid_bytes", ())))
 
 
 def _tree_bytes(tree) -> int:
@@ -110,6 +131,75 @@ def profile_resnet(params, cfg, image_sds) -> ChainProfile:
     return profile_sequential(fns, image_sds, labels)
 
 
+def flash_training_eligible(cfg, s: int) -> bool:
+    """Would the training forward ACTUALLY dispatch to the flash kernel?
+
+    Mirrors the dispatch gates end to end — ``transformer.forward`` (a
+    uniform window schedule is required to pass a static window into the
+    scan), ``attention.attn_block`` (non-MLA attention, 1-D rope
+    positions), and ``kernels.flash.ops`` (Mosaic-legal head_dim and
+    sequence length for the compiled backend).  The planner must budget
+    what the model will really do: a config that *asks* for flash but
+    falls back to the jnp/ref path still pays O(S^2) residuals.
+    """
+    from repro.kernels.flash import kernel as flash_kernel, ops as flash_ops
+    if cfg.mixer not in ("attn", "hybrid") or cfg.mla is not None:
+        return False
+    if cfg.attn_backend == "jnp":
+        return False
+    if cfg.global_layers or cfg.mrope_sections is not None:
+        return False
+    if cfg.attn_backend == "pallas":
+        if cfg.head_dim not in flash_ops.SUPPORTED_HEAD_DIMS:
+            return False
+        if s < flash_kernel.DEFAULT_BQ and s % flash_kernel.DEFAULT_BQ:
+            return False
+    return True
+
+
+def attn_resid_bytes(cfg, b: int, s: int, ctx: int,
+                     dtype_bytes: int = 2) -> int:
+    """Backward-residual bytes of one attention layer, backend-aware.
+
+    Both paths keep q/o per query head and k/v per KV head alive between
+    forward and backward.  On top of that the jnp path's autodiff saves
+    the f32 (S x ctx) probability matrix per head — the O(S^2) term —
+    while the flash custom_vjp saves only the two f32 softmax stat rows
+    (m, l) per head and recomputes scores tile-by-tile in the backward
+    kernels.  This is the modelling change that stops RematPlans budgeting
+    phantom S^2 score tensors once the flash kernel really dispatches
+    (:func:`flash_training_eligible` — NOT merely when the config asks
+    for a flash backend).
+    """
+    if cfg.mixer not in ("attn", "hybrid"):
+        return 0
+    qo_kv = (2 * cfg.n_heads + 2 * cfg.n_kv) * b * s * cfg.head_dim \
+        * dtype_bytes
+    if not flash_training_eligible(cfg, s):
+        return qo_kv + 4 * b * cfg.n_heads * s * ctx       # f32 probs
+    return qo_kv + 2 * 4 * b * cfg.n_heads * s             # f32 m, l rows
+
+
+def flash_bwd_recompute_flops(cfg, b: int, s: int) -> tuple[float, ...]:
+    """Per-layer extra FLOPs the flash backward spends recomputing scores.
+
+    Both the dQ and dKV kernels re-run the (S x ctx) QK^T contraction from
+    the saved stats instead of loading a stored probability matrix —
+    2 x (2 * b * s * ctx * H * D) per layer, the flash memory/FLOP trade.
+    Zero when the flash kernel would not actually dispatch
+    (:func:`flash_training_eligible`) — e.g. ``attn_backend="jnp"``
+    (scores are stored, not recomputed) or non-attention layers.
+    """
+    from repro.models import transformer
+    if not flash_training_eligible(cfg, s):
+        return tuple(0.0 for _ in range(cfg.n_layers))
+    out = []
+    for w in (int(x) for x in transformer.layer_windows(cfg)):
+        ctx = s if w == 0 else min(w, s)
+        out.append(4.0 * b * s * ctx * cfg.n_heads * cfg.head_dim)
+    return tuple(out)
+
+
 def profile_transformer(cfg, batch_sds, *, dtype_bytes: int = 2
                         ) -> ChainProfile:
     """Profile the block scan: carry bytes + window-aware analytic FLOPs.
@@ -119,7 +209,9 @@ def profile_transformer(cfg, batch_sds, *, dtype_bytes: int = 2
     per-block FLOPs are 2 * tokens * block_params (matmuls) plus the
     attention-score term, which varies per layer for windowed/hybrid archs
     (``cfg.window`` + ``cfg.global_layers``) — the source of heterogeneity
-    the budget solver exploits.
+    the budget solver exploits.  ``resid_bytes`` carries the backend-aware
+    attention backward residuals (:func:`attn_resid_bytes`): O(S^2) on the
+    jnp path, O(S*D) on the flash (interpret/pallas) path.
     """
     from repro.models import transformer
     b, s = batch_sds["tokens"].shape
@@ -132,7 +224,7 @@ def profile_transformer(cfg, batch_sds, *, dtype_bytes: int = 2
     per_block_params = block_elems / cfg.n_layers
 
     windows = [int(w) for w in transformer.layer_windows(cfg)]
-    act, flops, labels = [], [], []
+    act, flops, labels, resid = [], [], [], []
     for i, w in enumerate(windows):
         ctx = s if w == 0 else min(w, s)
         attn_flops = 0.0
@@ -140,8 +232,10 @@ def profile_transformer(cfg, batch_sds, *, dtype_bytes: int = 2
             attn_flops = 4.0 * b * s * ctx * cfg.n_heads * cfg.head_dim
         flops.append(2.0 * b * s * per_block_params + attn_flops)
         act.append(carry_bytes)
+        resid.append(attn_resid_bytes(cfg, b, s, ctx, dtype_bytes))
         labels.append(f"block{i}" + ("" if w == 0 else f"@w{w}"))
-    return ChainProfile(tuple(act), tuple(flops), tuple(labels))
+    return ChainProfile(tuple(act), tuple(flops), tuple(labels),
+                        tuple(resid))
 
 
 # ---------------------------------------------------------------------------
@@ -150,7 +244,8 @@ def profile_transformer(cfg, batch_sds, *, dtype_bytes: int = 2
 def plan_min_peak(profile: ChainProfile, num_checkpoints: int,
                   policy: str = "full") -> RematPlan:
     """Dual solver: best placement of a fixed number of checkpoints."""
-    bounds = min_peak_boundaries(profile.act_bytes, num_checkpoints)
+    bounds = min_peak_boundaries(profile.act_bytes, num_checkpoints,
+                                 resid_bytes=profile.resid_or_none)
     return RematPlan(profile.n_layers, tuple(bounds), policy,
                      source=f"min_peak:k={num_checkpoints}")
 
@@ -167,11 +262,12 @@ def plan_for_budget(profile: ChainProfile, budget_bytes: float,
     import warnings
 
     bounds, feasible = budget_boundaries(profile.act_bytes, profile.flops,
-                                         budget_bytes)
+                                         budget_bytes,
+                                         resid_bytes=profile.resid_or_none)
     tag = f"budget:{int(budget_bytes)}" + ("" if feasible else ":infeasible")
     if not feasible:
-        peak = plan_metrics(profile.act_bytes, profile.flops,
-                            bounds)["peak_bytes"]
+        peak = plan_metrics(profile.act_bytes, profile.flops, bounds,
+                            resid_bytes=profile.resid_or_none)["peak_bytes"]
         warnings.warn(
             f"remat budget {budget_bytes/2**20:.1f} MiB is infeasible for "
             f"this chain; best-effort plan peaks at {peak/2**20:.1f} MiB "
@@ -181,7 +277,8 @@ def plan_for_budget(profile: ChainProfile, budget_bytes: float,
 
 def plan_report(profile: ChainProfile, plan: RematPlan) -> dict:
     """Human/JSON-facing summary of a plan against its profile."""
-    m = plan_metrics(profile.act_bytes, profile.flops, plan.boundaries)
+    m = plan_metrics(profile.act_bytes, profile.flops, plan.boundaries,
+                     resid_bytes=profile.resid_or_none)
     return {
         "source": plan.source,
         "n_layers": plan.n_layers,
@@ -191,4 +288,5 @@ def plan_report(profile: ChainProfile, plan: RematPlan) -> dict:
         "recompute_frac": (m["recompute_flops"] / profile.total_flops()
                            if profile.total_flops() else 0.0),
         "no_remat_bytes": profile.total_bytes(),
+        "resid_bytes_total": profile.total_resid_bytes(),
     }

@@ -130,23 +130,42 @@ def _prefix(values: Sequence[float]) -> list[float]:
     return out
 
 
+def _live_prefix(act_bytes: Sequence[int],
+                 resid_bytes: "Sequence[int] | None") -> list[float]:
+    """Prefix sums of the per-layer LIVE bytes during a segment's backward:
+    the recomputed carry plus the layer's own backward residuals (for
+    attention layers, the jnp path's O(S^2) probability matrix or the flash
+    path's O(S*D) stats — see ``profile.profile_transformer``)."""
+    if resid_bytes is None:
+        return _prefix(act_bytes)
+    if len(resid_bytes) != len(act_bytes):
+        raise ValueError(
+            f"resid_bytes length {len(resid_bytes)} != {len(act_bytes)}")
+    return _prefix([a + r for a, r in zip(act_bytes, resid_bytes)])
+
+
 def plan_metrics(act_bytes: Sequence[int], flops: Sequence[float],
-                 boundaries: Sequence[int]) -> dict:
+                 boundaries: Sequence[int],
+                 resid_bytes: "Sequence[int] | None" = None) -> dict:
     """Cost model of a placement: stored/live/peak bytes + recompute FLOPs.
 
-    ``recompute_flops`` is exact for the sequential execution form
-    (``checkpoint_sequential`` leaves the last segment un-rematted) and a
-    LOWER bound for the scan form, where ``remat_scan`` remats every
-    segment — there the true recompute is ~all forward FLOPs regardless of
-    placement, and boundary choice trades stored vs live bytes only.
+    ``resid_bytes`` (optional, per layer) are backward residuals live
+    during the segment's backward but NOT stored at checkpoint boundaries
+    — they widen ``max_live_bytes`` only.  ``recompute_flops`` is exact
+    for the sequential execution form (``checkpoint_sequential`` leaves
+    the last segment un-rematted) and a LOWER bound for the scan form,
+    where ``remat_scan`` remats every segment — there the true recompute
+    is ~all forward FLOPs regardless of placement, and boundary choice
+    trades stored vs live bytes only.
     """
     n = len(act_bytes)
     b = sorted(boundaries)
-    p = _prefix(act_bytes)
+    pl_ = _live_prefix(act_bytes, resid_bytes)
     fp = _prefix(flops)
     bounds = [0, *b, n]
     stored = sum(act_bytes[x - 1] for x in b)
-    max_live = max(p[hi] - p[lo] for lo, hi in zip(bounds[:-1], bounds[1:]))
+    max_live = max(pl_[hi] - pl_[lo] for lo, hi in zip(bounds[:-1],
+                                                      bounds[1:]))
     return {
         "stored_bytes": int(stored),
         "max_live_bytes": int(max_live),
@@ -174,15 +193,22 @@ def _pareto(states):
 # semantically identical; repro.core.checkpoint.optimal_segments delegates
 # here).
 # ---------------------------------------------------------------------------
-def min_peak_boundaries(act_bytes: Sequence[int],
-                        num_checkpoints: int) -> list[int]:
-    """Place ``num_checkpoints`` boundaries minimizing stored + max live."""
+def min_peak_boundaries(act_bytes: Sequence[int], num_checkpoints: int,
+                        resid_bytes: "Sequence[int] | None" = None
+                        ) -> list[int]:
+    """Place ``num_checkpoints`` boundaries minimizing stored + max live.
+
+    ``resid_bytes`` widen each layer's live contribution (backward
+    residuals recomputed/held inside the segment) without being storable
+    at boundaries — segments rich in jnp-attention S^2 residuals get cut
+    shorter, flash segments longer.
+    """
     n = len(act_bytes)
     k = min(num_checkpoints, n - 1)
     if k <= 0 or n <= 1:
         return []
     sizes = list(act_bytes)
-    p = _prefix(sizes)
+    p = _live_prefix(sizes, resid_bytes)
 
     def seg_cost(lo, hi):
         return p[hi] - p[lo]
@@ -214,16 +240,20 @@ def min_peak_boundaries(act_bytes: Sequence[int],
 # Primal: byte budget -> min recompute FLOPs.
 # ---------------------------------------------------------------------------
 def budget_boundaries(act_bytes: Sequence[int], flops: Sequence[float],
-                      budget_bytes: float) -> tuple[list[int], bool]:
+                      budget_bytes: float,
+                      resid_bytes: "Sequence[int] | None" = None
+                      ) -> tuple[list[int], bool]:
     """Minimize recompute FLOPs subject to ``peak_bytes <= budget``.
 
     Returns ``(boundaries, feasible)``.  When no placement fits the budget,
     the globally peak-minimal placement is returned with ``feasible=False``
     (best effort — the caller decides whether to warn or abort).
+    ``resid_bytes`` enter the live-set (peak) term only, as in
+    :func:`plan_metrics`.
     """
     n = len(act_bytes)
     sizes = list(act_bytes)
-    p = _prefix(sizes)
+    p = _live_prefix(sizes, resid_bytes)
 
     def live(lo, hi):
         return p[hi] - p[lo]

@@ -136,6 +136,105 @@ class TestProfiles:
         assert len(set(prof.act_bytes)) == 1  # carry bytes are uniform
 
 
+class TestBackendAwareResiduals:
+    """ISSUE 2: flash layers carry O(S*D) residuals, not S^2 scores."""
+
+    def _profiles(self, s=512):
+        import dataclasses
+        from repro import configs
+        # head_dim pinned to a Mosaic-legal 64: the smoke config's 16
+        # would make the pallas backend INELIGIBLE (silent ref fallback)
+        # and the profiler must then budget S^2 — tested separately below
+        cfg = dataclasses.replace(configs.smoke_config("llama3-8b"),
+                                  head_dim=64)
+        batch = {"tokens": jax.ShapeDtypeStruct((2, s), jnp.int32)}
+        p_jnp = profile_transformer(cfg, batch)
+        p_fla = profile_transformer(
+            dataclasses.replace(cfg, attn_backend="pallas"), batch)
+        return cfg, p_jnp, p_fla
+
+    def test_flash_resid_subquadratic(self):
+        cfg, p_jnp, p_fla = self._profiles()
+        assert p_jnp.resid_bytes and p_fla.resid_bytes
+        # jnp budgets the f32 (S x S) probability matrix; flash only the
+        # O(S*D) stats -> the S^2 phantom is gone from every layer
+        s2 = 4 * 2 * cfg.n_heads * 512 * 512
+        for rj, rf in zip(p_jnp.resid_bytes, p_fla.resid_bytes):
+            assert rj - rf == s2 - 2 * 4 * 2 * cfg.n_heads * 512
+            assert rf < rj / 2
+
+    def test_resid_widens_planned_peak(self):
+        _, p_jnp, p_fla = self._profiles()
+        plan = plan_min_peak(p_jnp, 3)
+        rep_jnp = plan_report(p_jnp, plan)
+        rep_fla = plan_report(p_fla, plan)
+        assert rep_jnp["peak_bytes"] > rep_fla["peak_bytes"]
+        assert rep_jnp["resid_bytes_total"] > rep_fla["resid_bytes_total"]
+        # carries are identical; only the live-set term moved
+        assert rep_jnp["stored_bytes"] == rep_fla["stored_bytes"]
+
+    def test_solver_resid_shifts_boundaries(self):
+        # two fat-residual layers at the end: the resid-aware DP must cut
+        # them apart while the resid-blind one sees a flat chain
+        act = [10] * 6
+        resid = [0, 0, 0, 0, 100, 100]
+        blind = min_peak_boundaries(act, 1)
+        aware = min_peak_boundaries(act, 1, resid_bytes=resid)
+        m_blind = plan_metrics(act, [1.0] * 6, blind, resid_bytes=resid)
+        m_aware = plan_metrics(act, [1.0] * 6, aware, resid_bytes=resid)
+        assert aware == [5]                       # splits the two fat layers
+        assert m_aware["peak_bytes"] < m_blind["peak_bytes"]
+
+    def test_budget_solver_accounts_resid(self):
+        act = [10] * 6
+        resid = [0, 0, 0, 0, 100, 100]
+        # feasible without resid, infeasible live-set once resid counts
+        b_blind, ok_blind = budget_boundaries(act, [1.0] * 6, 80)
+        assert ok_blind and b_blind == []
+        b_aware, ok_aware = budget_boundaries(act, [1.0] * 6, 80,
+                                              resid_bytes=resid)
+        assert not ok_aware or b_aware != []
+
+    def test_flash_bwd_recompute_flops(self):
+        import dataclasses
+        from repro import configs
+        from repro.plan import flash_bwd_recompute_flops
+        cfg = dataclasses.replace(configs.smoke_config("llama3-8b"),
+                                  attn_backend="pallas", head_dim=64)
+        per_layer = flash_bwd_recompute_flops(cfg, 2, 512)
+        assert len(per_layer) == cfg.n_layers
+        # = 2x the forward QK^T term (dQ and dKV each recompute scores)
+        assert per_layer[0] == 4.0 * 2 * 512 * 512 * cfg.n_heads \
+            * cfg.head_dim
+        cfg_jnp = dataclasses.replace(cfg, attn_backend="jnp")
+        assert sum(flash_bwd_recompute_flops(cfg_jnp, 2, 512)) == 0.0
+
+    def test_resid_follows_effective_dispatch_not_config_flag(self):
+        """Asking for a flash backend is not enough: shapes/archs where
+        the model silently falls back to the jnp/ref path must still be
+        budgeted at O(S^2), or budget plans OOM."""
+        import dataclasses
+        from repro import configs
+        from repro.plan import flash_training_eligible
+        batch = {"tokens": jax.ShapeDtypeStruct((2, 512), jnp.int32)}
+        # smoke head_dim=16: pallas falls back to ref -> S^2 budget
+        tiny = dataclasses.replace(configs.smoke_config("llama3-8b"),
+                                   attn_backend="pallas")
+        assert not flash_training_eligible(tiny, 512)
+        assert profile_transformer(tiny, batch).resid_bytes == \
+            profile_transformer(dataclasses.replace(
+                tiny, attn_backend="jnp"), batch).resid_bytes
+        # ...but the interpreter executes any head_dim -> O(S*D) budget
+        interp = dataclasses.replace(tiny, attn_backend="interpret")
+        assert flash_training_eligible(interp, 512)
+        assert profile_transformer(interp, batch).resid_bytes < \
+            profile_transformer(tiny, batch).resid_bytes
+        # global_layers force traced windows -> jnp path on any backend
+        hyb = dataclasses.replace(configs.smoke_config("hymba-1.5b"),
+                                  attn_backend="interpret")
+        assert hyb.global_layers and not flash_training_eligible(hyb, 512)
+
+
 class TestPlannedExecution:
     def test_planned_resnet_grads_match(self):
         """A solved plan through cnn.forward reproduces plain grads."""
