@@ -309,10 +309,13 @@ def plan_vs_uniform():
 
 
 def flash_fwd_bwd():
-    """Trainable flash attention (ISSUE 2 acceptance): fwd-only vs fwd+bwd,
-    pallas custom_vjp vs the jnp O(S^2) path — residual ("peak between fwd
-    and bwd") bytes across S, plus wall time where the kernels execute on
-    CPU (interpret mode).  Writes BENCH_flash.json.
+    """Trainable flash attention (ISSUE 2 + 3 acceptance): fwd-only vs
+    fwd+bwd, pallas custom_vjp vs the jnp O(S^2) path — residual ("peak
+    between fwd and bwd") bytes across S, wall time where the kernels
+    execute on CPU (interpret mode), and the sparse-grid tile/FLOP
+    claw-back (visited vs dense KV tile-steps, measured via the kernels'
+    debug counters at a CPU-feasible size and analytic across S).
+    Writes BENCH_flash.json.
 
     The pallas rows use ``backend="pallas"`` under ``jax.eval_shape`` (the
     custom_vjp residual structure is backend-independent; abstract eval
@@ -322,7 +325,8 @@ def flash_fwd_bwd():
     import json
     import os
 
-    from repro.kernels.flash import ops as flash_ops, ref as flash_ref
+    from repro.kernels.flash import kernel as flash_kernel, \
+        ops as flash_ops, ref as flash_ref
 
     b, h, hkv, d = 1, 4, 2, 64
     out: dict = {"shape": {"batch": b, "heads": h, "kv_heads": hkv,
@@ -362,6 +366,63 @@ def flash_fwd_bwd():
                 entry["jnp"]["fwd_bwd_peak_bytes"], \
                 "flash custom_vjp must beat the jnp S^2 residuals"
         out["cases"][f"s{s}"] = entry
+
+    # ---- sparse grids (ISSUE 3): visited vs dense tile-steps ----------
+    # analytic counts across S for the two schedules that matter, plus a
+    # measured interpret-mode run (debug counters) to prove the kernels
+    # execute exactly the analytic schedule.
+    sparsity: dict = {}
+    for s in (512, 1024, 2048):
+        for name, w in (("causal", 0), ("window256", 256)):
+            if w >= s:
+                continue
+            c = flash_kernel.tile_step_counts(s, causal=True, window=w)
+            steps = {g: c[g] for g in ("fwd", "dq", "dkv")}
+            visited = sum(steps.values())
+            dense = 3 * c["dense"]
+            sparsity[f"{name}_s{s}"] = {
+                **steps, "dense_per_grid": c["dense"],
+                "skipped_frac": round(1 - visited / dense, 4),
+            }
+            _rows(f"flash_sparse_{name}_s{s}", 0.0,
+                  f"visited={visited},dense={dense},"
+                  f"skipped={1 - visited/dense:.3f}")
+    # measured counters at S=512 (cheap in interpret mode): must equal
+    # the analytic schedule tile-for-tile
+    s_m, h_m = 512, 2
+    qm = jnp.asarray(np.random.default_rng(5).normal(
+        size=(h_m, s_m, d)).astype(np.float32))
+    o_m, m_m, l_m, cnt = flash_kernel.flash_attention_fwd_pallas(
+        qm, qm, qm, causal=True, interpret=True, debug_counts=True)
+    *_, dqc, dkvc = flash_kernel.flash_attention_bwd_pallas(
+        qm, qm, qm, o_m, m_m, l_m, jnp.ones_like(o_m), causal=True,
+        interpret=True, debug_counts=True)
+    c = flash_kernel.tile_step_counts(s_m, causal=True, window=0)
+    measured = {"fwd": int(cnt[0].sum()), "dq": int(dqc[0].sum()),
+                "dkv": int(dkvc[0].sum())}
+    assert measured == {g: c[g] for g in ("fwd", "dq", "dkv")}, \
+        (measured, c)
+    sparsity["measured_causal_s512"] = measured
+    out["sparsity"] = sparsity
+
+    # FLOP claw-back the planner now budgets (causal smoke config @ 2048)
+    import dataclasses as dc_mod
+
+    from repro import configs, plan as plan_mod
+    cfg_cb = dc_mod.replace(configs.smoke_config("llama3-8b"),
+                            attn_backend="pallas", head_dim=64)
+    rep = plan_mod.flash_attn_flop_report(cfg_cb, 1, 2048)
+    assert rep["eligible"] and rep["skip_frac"] >= 0.45
+    out["flop_clawback_s2048"] = {
+        "dense_gflops": round(rep["dense_flops"] / 1e9, 2),
+        "visited_gflops": round(rep["visited_flops"] / 1e9, 2),
+        "clawback_x": round(rep["dense_flops"] / rep["visited_flops"], 3),
+        "tile_skip_frac": round(rep["skip_frac"], 4),
+    }
+    _rows("flash_flop_clawback_s2048", 0.0,
+          f"dense_gflops={rep['dense_flops']/1e9:.1f},"
+          f"visited_gflops={rep['visited_flops']/1e9:.1f},"
+          f"clawback={rep['dense_flops']/rep['visited_flops']:.2f}x")
 
     # wall time at a CPU-executable size: interpret-mode kernels vs jnp
     s = 256

@@ -30,11 +30,22 @@ def _is_float(x) -> bool:
 
 @dataclasses.dataclass(frozen=True)
 class Policy:
-    """Dtype policy applied around a model function."""
+    """Dtype policy applied around a model function.
+
+    ``flash_resid_dtype`` extends the policy to the flash-attention
+    custom_vjp residual tuple: the saved (q, k, v, o) — the dominant
+    O(S*D) term of what lives between forward and backward — are stored
+    in this dtype while the (m, l) softmax stats always stay f32.  None
+    means residuals simply follow the compute dtype of their inputs (the
+    pre-policy behavior); the interesting setting is f32 compute with
+    bf16-stored residuals, trading backward recompute precision for
+    halved attention residual memory (see ``kernels/flash/ops.py``).
+    """
 
     param_dtype: Any = jnp.float32    # storage
     compute_dtype: Any = jnp.bfloat16  # matmuls / activations
     output_dtype: Any = jnp.float32    # logits / loss accumulation
+    flash_resid_dtype: Any = None      # saved flash (q,k,v,o); None=follow
 
     @staticmethod
     def full() -> "Policy":  # the paper's "standard pipeline" (pure FP32)
@@ -51,6 +62,11 @@ class Policy:
     @staticmethod
     def bf16_params() -> "Policy":  # aggressive: bf16 storage too (half memory)
         return Policy(jnp.bfloat16, jnp.bfloat16, jnp.float32)
+
+    @staticmethod
+    def resid_bf16() -> "Policy":  # f32 compute, bf16-SAVED flash residuals
+        return Policy(jnp.float32, jnp.float32, jnp.float32,
+                      flash_resid_dtype=jnp.bfloat16)
 
     def cast_to_compute(self, tree):
         return jax.tree_util.tree_map(
@@ -76,6 +92,7 @@ def get_policy(name: str) -> Policy:
             "bf16": Policy.bf16(),
             "fp16": Policy.fp16(),
             "bf16_params": Policy.bf16_params(),
+            "resid_bf16": Policy.resid_bf16(),
         }[name]
     except KeyError:
         raise ValueError(f"unknown mixed-precision policy {name!r}") from None

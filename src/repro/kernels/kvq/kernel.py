@@ -26,8 +26,15 @@ DEFAULT_BS = 512
 NEG_INF = -1e30
 
 
-def _flash_decode_kernel(q_ref, kq_ref, ks_ref, vq_ref, vs_ref, bias_ref,
-                         o_ref, m_ref, l_ref, acc_ref, *, sm_scale, ns):
+def _flash_decode_kernel(q_ref, kq_ref, ks_ref, vq_ref, vs_ref, *refs,
+                         sm_scale, ns, has_bias):
+    # bias is an OPTIONAL input: the no-mask case (lengths=None, bias=None
+    # in ops.decode_attention) never materializes a (B, S) zero tensor —
+    # the kernel simply has no bias operand to add.
+    if has_bias:
+        bias_ref, o_ref, m_ref, l_ref, acc_ref = refs
+    else:
+        o_ref, m_ref, l_ref, acc_ref = refs
     s = pl.program_id(2)
 
     @pl.when(s == 0)
@@ -40,7 +47,8 @@ def _flash_decode_kernel(q_ref, kq_ref, ks_ref, vq_ref, vs_ref, bias_ref,
     k = kq_ref[...][0, 0].astype(jnp.float32) * ks_ref[...][0, 0][:, None]
     v = vq_ref[...][0, 0].astype(jnp.float32) * vs_ref[...][0, 0][:, None]
     logits = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * sm_scale
-    logits = logits + bias_ref[...][0][None, :]                   # (G, BS)
+    if has_bias:
+        logits = logits + bias_ref[...][0][None, :]               # (G, BS)
 
     m_prev = m_ref[...]
     m_new = jnp.maximum(m_prev, logits.max(axis=-1))
@@ -58,9 +66,10 @@ def _flash_decode_kernel(q_ref, kq_ref, ks_ref, vq_ref, vs_ref, bias_ref,
 
 
 @functools.partial(jax.jit, static_argnames=("sm_scale", "block_s", "interpret"))
-def flash_decode_pallas(q, k_q, k_s, v_q, v_s, bias, *, sm_scale: float,
+def flash_decode_pallas(q, k_q, k_s, v_q, v_s, bias=None, *, sm_scale: float,
                         block_s: int = DEFAULT_BS, interpret: bool = False):
-    """Shapes as in ref.decode_attention_ref; S % block_s == 0."""
+    """Shapes as in ref.decode_attention_ref; S % block_s == 0.
+    ``bias=None`` runs the unmasked kernel variant (no bias operand)."""
     b, hkv, g, d = q.shape
     s = k_q.shape[2]
     bs = min(block_s, s)
@@ -71,14 +80,19 @@ def flash_decode_pallas(q, k_q, k_s, v_q, v_s, bias, *, sm_scale: float,
     grid = (b, hkv, ns)
     kv_spec = pl.BlockSpec((1, 1, bs, d), lambda i, j, k: (i, j, k, 0))
     sc_spec = pl.BlockSpec((1, 1, bs), lambda i, j, k: (i, j, k))
+    in_specs = [
+        pl.BlockSpec((1, 1, g, d), lambda i, j, k: (i, j, 0, 0)),      # q
+        kv_spec, sc_spec, kv_spec, sc_spec,                             # k, v
+    ]
+    args = [q, k_q, k_s, v_q, v_s]
+    if bias is not None:
+        in_specs.append(pl.BlockSpec((1, bs), lambda i, j, k: (i, k)))
+        args.append(bias)
     return pl.pallas_call(
-        functools.partial(_flash_decode_kernel, sm_scale=sm_scale, ns=ns),
+        functools.partial(_flash_decode_kernel, sm_scale=sm_scale, ns=ns,
+                          has_bias=bias is not None),
         grid=grid,
-        in_specs=[
-            pl.BlockSpec((1, 1, g, d), lambda i, j, k: (i, j, 0, 0)),  # q
-            kv_spec, sc_spec, kv_spec, sc_spec,                         # k, v
-            pl.BlockSpec((1, bs), lambda i, j, k: (i, k)),              # bias
-        ],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec((1, 1, g, d), lambda i, j, k: (i, j, 0, 0)),
         out_shape=jax.ShapeDtypeStruct((b, hkv, g, d), q.dtype),
         scratch_shapes=[
@@ -87,7 +101,7 @@ def flash_decode_pallas(q, k_q, k_s, v_q, v_s, bias, *, sm_scale: float,
             _vmem((g, d), jnp.float32),                                  # acc
         ],
         interpret=interpret,
-    )(q, k_q, k_s, v_q, v_s, bias)
+    )(*args)
 
 
 def _vmem(shape, dtype):

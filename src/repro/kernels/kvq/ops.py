@@ -18,6 +18,9 @@ def decode_attention(q, k_q, k_s, v_q, v_s, *, lengths=None, bias=None,
     """q: (B, H, D); cache: (B, Hkv, S, D) int8 (+ (B, Hkv, S) scales).
 
     lengths: (B,) valid cache lengths -> padding mask; or explicit bias (B,S).
+    With neither, every cache slot is valid and NO bias tensor is built or
+    added — the unmasked case passes straight through instead of paying a
+    dense (B, S) f32 zero materialization + broadcast add per call.
     Returns (B, H, D) f32.
     """
     b, h, d = q.shape
@@ -25,13 +28,10 @@ def decode_attention(q, k_q, k_s, v_q, v_s, *, lengths=None, bias=None,
     assert h % hkv == 0, (h, hkv)
     g = h // hkv
     sm = sm_scale if sm_scale is not None else d ** -0.5
-    if bias is None:
-        if lengths is None:
-            bias = jnp.zeros((b, s), jnp.float32)
-        else:
-            pos = jnp.arange(s)[None, :]
-            bias = jnp.where(pos < lengths[:, None], 0.0, kernel.NEG_INF
-                             ).astype(jnp.float32)
+    if bias is None and lengths is not None:
+        pos = jnp.arange(s)[None, :]
+        bias = jnp.where(pos < lengths[:, None], 0.0, kernel.NEG_INF
+                         ).astype(jnp.float32)
     qg = q.astype(jnp.float32).reshape(b, hkv, g, d)
     if backend == "ref":
         out = ref.decode_attention_ref(qg, k_q, k_s, v_q, v_s, bias, sm)

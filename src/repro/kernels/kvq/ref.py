@@ -29,12 +29,14 @@ def decode_attention_ref(q, k_q, k_s, v_q, v_s, bias, sm_scale: float):
     q:   (B, Hkv, G, D) f32      — G = query heads per KV head (GQA group)
     k_q: (B, Hkv, S, D) int8,  k_s: (B, Hkv, S) f32
     v_q: (B, Hkv, S, D) int8,  v_s: (B, Hkv, S) f32
-    bias:(B, S) f32 additive mask (0 valid / -inf padded)
+    bias:(B, S) f32 additive mask (0 valid / -inf padded), or None for the
+         no-mask case (every cache slot valid — nothing is materialized)
     ->   (B, Hkv, G, D) f32
     """
     k = dequantize_kv(k_q, k_s)
     v = dequantize_kv(v_q, v_s)
     logits = jnp.einsum("bhgd,bhsd->bhgs", q.astype(jnp.float32), k) * sm_scale
-    logits = logits + bias[:, None, None, :]
+    if bias is not None:
+        logits = logits + bias[:, None, None, :]
     p = jax.nn.softmax(logits, axis=-1)
     return jnp.einsum("bhgs,bhsd->bhgd", p, v)

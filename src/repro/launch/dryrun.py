@@ -259,6 +259,10 @@ def dryrun_cell(arch: str, shape_name: str, mesh, *, verbose=True,
             mb_b, mb_s = mb_sds["tokens"].shape
             cfg_flash = dc.replace(cfg, attn_backend="pallas")
             flash_prof = plan_mod.profile_transformer(cfg_flash, mb_sds)
+            # sparse-grid honesty: what the dense nQ x nK grids would
+            # spend vs the tiles the wedge grids actually visit
+            flop_rep = plan_mod.flash_attn_flop_report(cfg_flash, mb_b,
+                                                       mb_s)
             plan_info = {
                 "plan_peak_bytes": rep["peak_bytes"],
                 "plan_no_remat_bytes": rep["no_remat_bytes"],
@@ -269,6 +273,9 @@ def dryrun_cell(arch: str, shape_name: str, mesh, *, verbose=True,
                 "flash_bwd_recompute_flops": sum(
                     plan_mod.flash_bwd_recompute_flops(cfg_flash, mb_b,
                                                        mb_s)),
+                "flash_attn_dense_flops": flop_rep["dense_flops"],
+                "flash_attn_visited_flops": flop_rep["visited_flops"],
+                "flash_tile_skip_frac": flop_rep["skip_frac"],
             }
         except Exception as e:  # noqa: BLE001 - advisory, never fail a cell
             plan_info = {"plan_error": f"{type(e).__name__}: {e}"[:200]}
@@ -322,6 +329,12 @@ def dryrun_cell(arch: str, shape_name: str, mesh, *, verbose=True,
                   f"(flash would be {result['flash_resid_bytes']/2**20:.1f} "
                   f"MiB + {result['flash_bwd_recompute_flops']/1e9:.1f} "
                   f"recompute GFLOPs)")
+            if result.get("flash_tile_skip_frac"):
+                print(f"  flash sparse grids: "
+                      f"{result['flash_attn_visited_flops']/1e9:.1f} GFLOPs "
+                      f"visited vs {result['flash_attn_dense_flops']/1e9:.1f}"
+                      f" dense ({result['flash_tile_skip_frac']*100:.0f}% of "
+                      f"KV tile-steps skipped)")
         print(f"  useful-FLOP fraction {result['useful_flops_frac']:.2f}")
         sys.stdout.flush()
     return result

@@ -131,13 +131,20 @@ def run(args):
     if cfg.attn_backend == "jnp":
         print("attn backend: jnp")
     else:
-        from repro.plan import flash_training_eligible
+        from repro.plan import flash_attn_flop_report, \
+            flash_training_eligible
         eligible = flash_training_eligible(cfg, args.seq)
         print(f"attn backend: {cfg.attn_backend}"
               + (" (flash custom_vjp: O(S*D) attention residuals)"
                  if eligible else
                  " — flash INELIGIBLE for this arch/shape, jnp path "
                  "(O(S^2) residuals) will run"))
+        if eligible:
+            rep = flash_attn_flop_report(cfg, args.batch, args.seq)
+            print(f"  sparse flash grids: {rep['skip_frac']*100:.0f}% of KV "
+                  f"tile-steps skipped "
+                  f"({rep['visited_flops']/1e9:.1f} GFLOPs visited vs "
+                  f"{rep['dense_flops']/1e9:.1f} dense per step)")
 
     batch_sds = {
         "tokens": jax.ShapeDtypeStruct((args.batch, args.seq), jnp.int32),
@@ -245,7 +252,11 @@ def main():
     ap.add_argument("--seq", type=int, default=128)
     ap.add_argument("--accum", type=int, default=1)
     ap.add_argument("--policy", default="bf16",
-                    choices=["full", "bf16", "fp16", "bf16_params"])
+                    choices=["full", "bf16", "fp16", "bf16_params",
+                             "resid_bf16"],
+                    help="mixed-precision policy; resid_bf16 = f32 compute "
+                         "with the flash custom_vjp's saved (q,k,v,o) "
+                         "residuals stored in bf16 (stats stay f32)")
     ap.add_argument("--attn-backend", default=None,
                     choices=["jnp", "interpret", "pallas"],
                     help="attention kernel override (default: the arch "

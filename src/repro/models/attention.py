@@ -95,8 +95,13 @@ def gqa_attention(q, k, v, *, q_pos, k_pos, window: int = 0,
 # Standard GQA block (projections + rope + attention).
 # ---------------------------------------------------------------------------
 def attn_block(p, x, cfg, *, positions, window: int = 0, layer_window=None,
-               causal: bool = True, mesh=None):
-    """x: (B, S, D_model).  p holds wq/wk/wv/wo.  Returns (out, (k, v))."""
+               causal: bool = True, mesh=None, flash_resid_dtype=None):
+    """x: (B, S, D_model).  p holds wq/wk/wv/wo.  Returns (out, (k, v)).
+
+    ``flash_resid_dtype`` is the mixed-precision policy for the flash
+    custom_vjp's saved (q, k, v, o) residuals (see Policy.flash_resid_dtype);
+    it only matters on the flash branch — jnp autodiff owns its own
+    residuals."""
     b, s, _ = x.shape
     h, hkv, hd = cfg.n_heads, cfg.n_kv, cfg.head_dim
     q = (x @ p["wq"]).reshape(b, s, h, hd)
@@ -126,7 +131,7 @@ def attn_block(p, x, cfg, *, positions, window: int = 0, layer_window=None,
         out = flash_ops.flash_attention(
             jnp.swapaxes(q, 1, 2), jnp.swapaxes(k, 1, 2),
             jnp.swapaxes(v, 1, 2), causal=True, window=w,
-            backend=cfg.attn_backend)
+            backend=cfg.attn_backend, resid_dtype=flash_resid_dtype)
         out = jnp.swapaxes(out, 1, 2)
     else:
         out = gqa_attention(q, k, v, q_pos=pos1d, k_pos=pos1d, window=w,

@@ -236,7 +236,7 @@ def _ffn_apply(p, x, cfg, mesh=None):
 
 def _block_apply(p, x, cfg, *, positions, window, ssd_backend="ref",
                  enc_kv=None, collect_cache: bool = False, mesh=None,
-                 cache_quantized: bool = True):
+                 cache_quantized: bool = True, flash_resid_dtype=None):
     cache_entry = {}
     h = rms_norm(x, p["ln1"], cfg.norm_eps, bf16_grad=cfg.norm_bf16_grad)
     if cfg.mixer == "attn":
@@ -248,7 +248,8 @@ def _block_apply(p, x, cfg, *, positions, window, ssd_backend="ref",
         else:
             mix, (k, v) = attn.attn_block(p["attn"], h, cfg,
                                           positions=positions,
-                                          layer_window=window, mesh=mesh)
+                                          layer_window=window, mesh=mesh,
+                                          flash_resid_dtype=flash_resid_dtype)
             if collect_cache:
                 cache_entry = _kv_entry(k, v, cfg, mesh,
                                         quantized=cache_quantized)
@@ -259,7 +260,8 @@ def _block_apply(p, x, cfg, *, positions, window, ssd_backend="ref",
             cache_entry = st
     else:  # hybrid: parallel attention + SSM heads, norm-and-average fusion
         a_out, (k, v) = attn.attn_block(p["attn"], h, cfg, positions=positions,
-                                        layer_window=window, mesh=mesh)
+                                        layer_window=window, mesh=mesh,
+                                        flash_resid_dtype=flash_resid_dtype)
         s_out, st = ssm_mod.ssm_block(p["ssm"], h, cfg, ssd_backend=ssd_backend,
                                       return_state=collect_cache)
         if collect_cache:
@@ -365,11 +367,11 @@ def forward(params, cfg: ModelConfig, batch: dict, *,
             k = (enc_kv @ p_layer["xattn"]["wk"]).reshape(bb, se, hkv, hd)
             v = (enc_kv @ p_layer["xattn"]["wv"]).reshape(bb, se, hkv, hd)
             ekv = (k, v)
-        out, aux, entry = _block_apply(p_layer, carry, cfg,
-                                       positions=positions, window=win,
-                                       ssd_backend=ssd_backend, enc_kv=ekv,
-                                       collect_cache=build_cache, mesh=mesh,
-                                       cache_quantized=cache_quantized)
+        out, aux, entry = _block_apply(
+            p_layer, carry, cfg, positions=positions, window=win,
+            ssd_backend=ssd_backend, enc_kv=ekv, collect_cache=build_cache,
+            mesh=mesh, cache_quantized=cache_quantized,
+            flash_resid_dtype=policy.flash_resid_dtype)
         return out, (aux, entry)
 
     x, (auxes, entries) = remat_scan(

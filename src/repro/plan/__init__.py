@@ -4,6 +4,7 @@ for checkpoint placement, and the resulting :class:`RematPlan` is executed
 by ``repro.core.checkpoint.CheckpointConfig(plan=...)`` — the single remat
 entry point for every model stack."""
 from repro.plan.profile import (ChainProfile, attn_resid_bytes,
+                                flash_attn_flop_report,
                                 flash_bwd_recompute_flops,
                                 flash_training_eligible, plan_for_budget,
                                 plan_min_peak, plan_report, profile_resnet,
@@ -14,8 +15,8 @@ from repro.plan.solver import (RematPlan, budget_boundaries,
 __all__ = [
     "ChainProfile", "RematPlan",
     "profile_sequential", "profile_resnet", "profile_transformer",
-    "attn_resid_bytes", "flash_bwd_recompute_flops",
-    "flash_training_eligible",
+    "attn_resid_bytes", "flash_attn_flop_report",
+    "flash_bwd_recompute_flops", "flash_training_eligible",
     "plan_min_peak", "plan_for_budget", "plan_report",
     "min_peak_boundaries", "budget_boundaries", "plan_metrics",
 ]

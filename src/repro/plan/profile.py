@@ -158,7 +158,8 @@ def flash_training_eligible(cfg, s: int) -> bool:
 
 
 def attn_resid_bytes(cfg, b: int, s: int, ctx: int,
-                     dtype_bytes: int = 2) -> int:
+                     dtype_bytes: int = 2,
+                     flash_resid_bytes: "int | None" = None) -> int:
     """Backward-residual bytes of one attention layer, backend-aware.
 
     Both paths keep q/o per query head and k/v per KV head alive between
@@ -170,37 +171,91 @@ def attn_resid_bytes(cfg, b: int, s: int, ctx: int,
     phantom S^2 score tensors once the flash kernel really dispatches
     (:func:`flash_training_eligible` — NOT merely when the config asks
     for a flash backend).
+
+    ``flash_resid_bytes`` is the per-element width of the SAVED flash
+    (q, k, v, o) tuple when a ``Policy.flash_resid_dtype`` residual policy
+    is active (e.g. 2 for bf16-stored residuals under f32 compute);
+    default: residuals follow the compute dtype.  The (m, l) stats are
+    budgeted at f32 regardless — exactly the kernel contract.
     """
     if cfg.mixer not in ("attn", "hybrid"):
         return 0
-    qo_kv = (2 * cfg.n_heads + 2 * cfg.n_kv) * b * s * cfg.head_dim \
-        * dtype_bytes
     if not flash_training_eligible(cfg, s):
+        qo_kv = (2 * cfg.n_heads + 2 * cfg.n_kv) * b * s * cfg.head_dim \
+            * dtype_bytes
         return qo_kv + 4 * b * cfg.n_heads * s * ctx       # f32 probs
+    rb = dtype_bytes if flash_resid_bytes is None else flash_resid_bytes
+    qo_kv = (2 * cfg.n_heads + 2 * cfg.n_kv) * b * s * cfg.head_dim * rb
     return qo_kv + 2 * 4 * b * cfg.n_heads * s             # f32 m, l rows
+
+
+def _flash_tile_counts(cfg, s: int) -> "list[dict]":
+    """Per-layer visited/dense tile-step counts of the sparse flash grids.
+
+    Computed on the PADDED grid the kernels actually run (ops.py rounds S
+    up to the 128-lane block and masks the tail via ``kv_len``), from the
+    same :func:`repro.kernels.flash.kernel.tile_step_counts` bounds the
+    kernels build their wedge grids from — planner budgets and measured
+    ``debug_counts`` counters agree tile-for-tile by construction.
+    """
+    from repro.kernels.flash import kernel as flash_kernel, ops as flash_ops
+    from repro.models import transformer
+    s_pad = flash_ops.padded_seq_len(s)
+    return [flash_kernel.tile_step_counts(s_pad, causal=True, window=w,
+                                          kv_len=s)
+            for w in (int(x) for x in transformer.layer_windows(cfg))]
 
 
 def flash_bwd_recompute_flops(cfg, b: int, s: int) -> tuple[float, ...]:
     """Per-layer extra FLOPs the flash backward spends recomputing scores.
 
-    Both the dQ and dKV kernels re-run the (S x ctx) QK^T contraction from
-    the saved stats instead of loading a stored probability matrix —
-    2 x (2 * b * s * ctx * H * D) per layer, the flash memory/FLOP trade.
-    Zero when the flash kernel would not actually dispatch
+    Both the dQ and dKV kernels re-run the QK^T contraction from the
+    saved stats instead of loading a stored probability matrix — but only
+    on the tiles their sparse grids actually visit: ``2 * BQ * BK * D``
+    FLOPs per visited tile-step per (batch x head), summed over the dQ
+    and dKV grids (causal visits ~1/2 of the dense rectangle, window
+    ~W/S).  Zero when the flash kernel would not actually dispatch
     (:func:`flash_training_eligible`) — e.g. ``attn_backend="jnp"``
     (scores are stored, not recomputed) or non-attention layers.
     """
-    from repro.models import transformer
     if not flash_training_eligible(cfg, s):
         return tuple(0.0 for _ in range(cfg.n_layers))
-    out = []
-    for w in (int(x) for x in transformer.layer_windows(cfg)):
-        ctx = s if w == 0 else min(w, s)
-        out.append(4.0 * b * s * ctx * cfg.n_heads * cfg.head_dim)
-    return tuple(out)
+    bh = b * cfg.n_heads * cfg.head_dim
+    return tuple(2.0 * bh * c["bq"] * c["bk"] * (c["dq"] + c["dkv"])
+                 for c in _flash_tile_counts(cfg, s))
 
 
-def profile_transformer(cfg, batch_sds, *, dtype_bytes: int = 2
+def flash_attn_flop_report(cfg, b: int, s: int) -> dict:
+    """Dense-vs-visited attention FLOPs across the three sparse grids.
+
+    Counts every matmul each grid runs per visited tile-step — forward
+    (QK^T, PV: 4·BQ·BK·D flops), dQ (score recompute, dP, dS·K: 6), dKV
+    (score recompute, P^T·dO, dP, dS^T·Q: 8) — against the same matmuls
+    on the dense nQ x nK rectangle a mask-blind grid executes.  This is
+    what dryrun train cells, the trainer banner and BENCH_flash.json
+    report as the sparse-grid FLOP claw-back.
+    """
+    if not flash_training_eligible(cfg, s):
+        return {"eligible": False, "dense_flops": 0.0, "visited_flops": 0.0,
+                "skip_frac": 0.0, "visited_tile_steps": 0,
+                "dense_tile_steps": 0}
+    bh = b * cfg.n_heads * cfg.head_dim
+    dense = visited = 0.0
+    vis_steps = dense_steps = 0
+    for c in _flash_tile_counts(cfg, s):
+        tile = bh * c["bq"] * c["bk"]
+        visited += tile * (4.0 * c["fwd"] + 6.0 * c["dq"] + 8.0 * c["dkv"])
+        dense += tile * (4.0 + 6.0 + 8.0) * c["dense"]
+        vis_steps += c["fwd"] + c["dq"] + c["dkv"]
+        dense_steps += 3 * c["dense"]
+    return {"eligible": True, "dense_flops": dense, "visited_flops": visited,
+            "skip_frac": 1.0 - (vis_steps / dense_steps if dense_steps
+                                else 0.0),
+            "visited_tile_steps": vis_steps, "dense_tile_steps": dense_steps}
+
+
+def profile_transformer(cfg, batch_sds, *, dtype_bytes: int = 2,
+                        flash_resid_bytes: "int | None" = None
                         ) -> ChainProfile:
     """Profile the block scan: carry bytes + window-aware analytic FLOPs.
 
@@ -211,7 +266,15 @@ def profile_transformer(cfg, batch_sds, *, dtype_bytes: int = 2
     (``cfg.window`` + ``cfg.global_layers``) — the source of heterogeneity
     the budget solver exploits.  ``resid_bytes`` carries the backend-aware
     attention backward residuals (:func:`attn_resid_bytes`): O(S^2) on the
-    jnp path, O(S*D) on the flash (interpret/pallas) path.
+    jnp path, O(S*D) on the flash (interpret/pallas) path;
+    ``flash_resid_bytes`` forwards a residual-policy dtype width
+    (``Policy.flash_resid_dtype``).
+
+    Attention-score FLOPs are dispatch-honest: the jnp paths execute the
+    dense (masked) score matmul, but the flash kernels run SPARSE grids
+    that skip whole-masked KV tiles — so flash-eligible layers are
+    budgeted at the visited-tile count (causal ~1/2 of dense, window
+    ~W/S), exactly what the remat DP pays to recompute that layer.
     """
     from repro.models import transformer
     b, s = batch_sds["tokens"].shape
@@ -224,15 +287,23 @@ def profile_transformer(cfg, batch_sds, *, dtype_bytes: int = 2
     per_block_params = block_elems / cfg.n_layers
 
     windows = [int(w) for w in transformer.layer_windows(cfg)]
+    flash = flash_training_eligible(cfg, s)
+    tile_counts = _flash_tile_counts(cfg, s) if flash else None
     act, flops, labels, resid = [], [], [], []
     for i, w in enumerate(windows):
         ctx = s if w == 0 else min(w, s)
         attn_flops = 0.0
         if cfg.mixer in ("attn", "hybrid"):
-            attn_flops = 4.0 * b * s * ctx * cfg.n_heads * cfg.head_dim
+            if flash:
+                c = tile_counts[i]
+                attn_flops = 4.0 * b * cfg.n_heads * cfg.head_dim \
+                    * c["bq"] * c["bk"] * c["fwd"]
+            else:
+                attn_flops = 4.0 * b * s * ctx * cfg.n_heads * cfg.head_dim
         flops.append(2.0 * b * s * per_block_params + attn_flops)
         act.append(carry_bytes)
-        resid.append(attn_resid_bytes(cfg, b, s, ctx, dtype_bytes))
+        resid.append(attn_resid_bytes(cfg, b, s, ctx, dtype_bytes,
+                                      flash_resid_bytes=flash_resid_bytes))
         labels.append(f"block{i}" + ("" if w == 0 else f"@w{w}"))
     return ChainProfile(tuple(act), tuple(flops), tuple(labels),
                         tuple(resid))

@@ -54,10 +54,13 @@ def plan_profile(cfg: ModelConfig, tc: TrainConfig, batch_sds: dict,
     per-device microbatch, in the policy's compute dtype.  Single source —
     resolve_remat and the launcher's --remat auto both use it."""
     from repro import plan as plan_mod
-    dtype_bytes = jnp.dtype(get_policy(tc.policy).compute_dtype).itemsize
+    pol = get_policy(tc.policy)
+    dtype_bytes = jnp.dtype(pol.compute_dtype).itemsize
+    flash_resid_bytes = None if pol.flash_resid_dtype is None else \
+        jnp.dtype(pol.flash_resid_dtype).itemsize
     return plan_mod.profile_transformer(
         cfg, microbatch_specs(batch_sds, accum=tc.accum, mesh=mesh),
-        dtype_bytes=dtype_bytes)
+        dtype_bytes=dtype_bytes, flash_resid_bytes=flash_resid_bytes)
 
 
 def resolve_remat(cfg: ModelConfig, tc: TrainConfig, batch_sds: dict,

@@ -198,14 +198,20 @@ class TestBackendAwareResiduals:
     def test_flash_bwd_recompute_flops(self):
         import dataclasses
         from repro import configs
+        from repro.kernels.flash.kernel import tile_step_counts
         from repro.plan import flash_bwd_recompute_flops
         cfg = dataclasses.replace(configs.smoke_config("llama3-8b"),
                                   attn_backend="pallas", head_dim=64)
         per_layer = flash_bwd_recompute_flops(cfg, 2, 512)
         assert len(per_layer) == cfg.n_layers
-        # = 2x the forward QK^T term (dQ and dKV each recompute scores)
-        assert per_layer[0] == 4.0 * 2 * 512 * 512 * cfg.n_heads \
-            * cfg.head_dim
+        # dQ and dKV each recompute scores, but only on the tiles their
+        # sparse grids visit — NOT the dense (S x S) rectangle
+        c = tile_step_counts(512, causal=True, window=0)
+        expect = 2.0 * 2 * cfg.n_heads * cfg.head_dim * c["bq"] * c["bk"] \
+            * (c["dq"] + c["dkv"])
+        assert per_layer[0] == expect
+        dense = 4.0 * 2 * 512 * 512 * cfg.n_heads * cfg.head_dim
+        assert per_layer[0] < 0.7 * dense     # causal claws back ~2x
         cfg_jnp = dataclasses.replace(cfg, attn_backend="jnp")
         assert sum(flash_bwd_recompute_flops(cfg_jnp, 2, 512)) == 0.0
 
