@@ -26,9 +26,11 @@ extra ~2x of the forward QK^T FLOPs across dQ+dKV, the flash trade).
 
 Sparse grids — Pallas grids are dense rectangles, but masked schedules
 (causal / sliding window / padded kv_len) leave whole tiles with no live
-position.  :func:`kv_tile_bounds` / :func:`q_tile_bounds` derive, from the
-same geometry as ``_position_mask``, the inclusive tile range each grid row
-actually has to visit, and the kernels exploit them three ways:
+position.  ``kv_tile_bounds`` / ``q_tile_bounds`` (hoisted into
+``repro.kernels.tiling``, shared with the kvq split-K decode kernel)
+derive, from the same geometry as ``_position_mask``, the inclusive tile
+range each grid row actually has to visit, and the kernels exploit them
+three ways:
 
   1. the forward and dQ grids remap their KV axis to a *wedge*: step ``j``
      of q tile ``qi`` loads KV tile ``lo(qi) + j`` and the axis extent is
@@ -66,121 +68,15 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-NEG_INF = -1e30
-DEFAULT_BQ = 128
-DEFAULT_BK = 128
-
-
-def _imin(a, b):
-    """min that stays a Python int on Python ints (static grid sizing)
-    and lowers to jnp.minimum on traced grid indices (index maps)."""
-    if isinstance(a, int) and isinstance(b, int):
-        return min(a, b)
-    return jnp.minimum(a, b)
-
-
-def _imax(a, b):
-    if isinstance(a, int) and isinstance(b, int):
-        return max(a, b)
-    return jnp.maximum(a, b)
-
-
-def _when(pred, fn):
-    """pl.when that constant-folds Python-bool predicates."""
-    if pred is True:
-        fn()
-    elif pred is not False:
-        pl.when(pred)(fn)
-
-
-def kv_tile_bounds(qi, *, bq, bk, causal, window, kv_len):
-    """Inclusive KV-tile range [lo, hi] that q tile ``qi`` must visit.
-
-    Derived from the same geometry as ``_position_mask``: a KV tile outside
-    [lo, hi] contains no (q_pos, k_pos) pair that the mask admits for any
-    row of q tile ``qi``.  Pure arithmetic — ``qi`` may be a Python int
-    (static grid sizing, visit counting) or a traced grid index (BlockSpec
-    index maps, kernel bodies); non-causal bounds are always Python ints,
-    so a padded KV tail shrinks the grid statically.
-
-    ``hi`` is clamped >= ``lo`` so every q tile visits at least one step
-    (the online-softmax finalize needs a step to run on; a fully-masked
-    row zeroes itself through the in-tile mask).
-    """
-    hi_valid = -(-kv_len // bk) - 1            # last non-padded KV tile
-    if not causal:
-        return 0, hi_valid
-    hi = _imin(hi_valid, ((qi + 1) * bq - 1) // bk)
-    lo = 0
-    if window > 0:
-        lo = _imax(0, (qi * bq - (window - 1)) // bk)
-        hi = _imax(hi, lo)
-    return lo, hi
-
-
-def q_tile_bounds(ki, *, bq, bk, causal, window, n_q, kv_len):
-    """Inclusive Q-tile range [lo, hi] that KV tile ``ki`` must visit on
-    the dKV grid (which q tiles can attend into this KV tile).  Same
-    contract as :func:`kv_tile_bounds`; the window reach is measured from
-    the last LIVE position of the tile (``kv_len`` ragged tail), so the
-    bounds are tight even on the ragged tile.  Fully-padded KV tiles
-    (beyond ``kv_len``) keep a one-step range and are compute-skipped
-    in-kernel via the ``pl.when`` early-out instead (their dK/dV are
-    zeros)."""
-    if not causal:
-        return 0, n_q - 1
-    lo = _imin((ki * bk) // bq, n_q - 1)
-    hi = n_q - 1
-    if window > 0:
-        khi = _imax(_imin((ki + 1) * bk, kv_len), ki * bk + 1) - 1
-        hi = _imin(hi, (khi + window - 1) // bq)
-        hi = _imax(hi, lo)
-    return lo, hi
-
-
-def _kv_visits(s_len, *, bq, bk, causal, window, kv_len):
-    """Per-q-tile visited KV-step counts (Python ints; fwd and dQ grids)."""
-    return [hi - lo + 1 for lo, hi in
-            (kv_tile_bounds(i, bq=bq, bk=bk, causal=causal, window=window,
-                            kv_len=kv_len) for i in range(s_len // bq))]
-
-
-def _q_visits(s_len, *, bq, bk, causal, window, kv_len):
-    """Per-KV-tile visited Q-step counts (dKV grid, per GQA group member).
-    Fully-padded KV tiles count 0 — the kernel's early-out skips them."""
-    n_q = s_len // bq
-    out = []
-    for j in range(s_len // bk):
-        if j * bk >= kv_len:
-            out.append(0)
-            continue
-        lo, hi = q_tile_bounds(j, bq=bq, bk=bk, causal=causal, window=window,
-                               n_q=n_q, kv_len=kv_len)
-        out.append(hi - lo + 1)
-    return out
-
-
-def tile_step_counts(s_len, *, bq: int = DEFAULT_BQ, bk: int = DEFAULT_BK,
-                     causal: bool = True, window: int = 0,
-                     kv_len: int | None = None) -> dict:
-    """Analytic visited-vs-dense tile-step counts, per attention head.
-
-    The exact twin of the kernels' ``debug_counts`` counters: ``fwd`` and
-    ``dq`` sum the wedge-grid KV steps whose matmuls execute, ``dkv`` the
-    Q steps per GQA group member, and ``dense`` is the nQ * nK rectangle a
-    mask-blind grid would run.  The planner's flash FLOP budgets
-    (``repro.plan.flash_bwd_recompute_flops``) and the benchmark claw-back
-    numbers are both computed from these counts, so kernel, planner and
-    report can never drift apart silently.
-    """
-    kv_len = s_len if kv_len is None else kv_len
-    bq, bk = min(bq, s_len), min(bk, s_len)
-    kw = dict(bq=bq, bk=bk, causal=causal, window=window, kv_len=kv_len)
-    fwd = sum(_kv_visits(s_len, **kw))
-    dkv = sum(_q_visits(s_len, **kw))
-    return {"fwd": fwd, "dq": fwd, "dkv": dkv,
-            "dense": (s_len // bq) * (s_len // bk),
-            "bq": bq, "bk": bk}
+# The tile-bounds machinery lives in repro.kernels.tiling (shared with the
+# kvq split-K decode grids); re-exported here because this module is the
+# flash family's historical home for it.
+from repro.kernels.tiling import (DEFAULT_BK, DEFAULT_BQ, NEG_INF,  # noqa: F401
+                                  imax as _imax, imin as _imin,
+                                  kv_tile_bounds, q_tile_bounds,
+                                  kv_visits as _kv_visits,
+                                  q_visits as _q_visits, tile_step_counts,
+                                  when as _when)
 
 
 def _position_mask(qi, ki, *, bq, bk, causal, window, kv_len, s_len):

@@ -279,6 +279,31 @@ def dryrun_cell(arch: str, shape_name: str, mesh, *, verbose=True,
             }
         except Exception as e:  # noqa: BLE001 - advisory, never fail a cell
             plan_info = {"plan_error": f"{type(e).__name__}: {e}"[:200]}
+    # Serve cells (prefill + decode): what the int8 cache encoding and the
+    # length-aware split-K decode grid buy, from the planner's serve-side
+    # reports (visited-tile counts match the kernel's debug counters
+    # tile-for-tile by construction).
+    if kind in ("prefill", "decode"):
+        try:
+            from repro import plan as plan_mod
+            cache_rep = plan_mod.kv_cache_report(cfg, sh["batch"], sh["seq"])
+            plan_info = {
+                "kv_cache_int8_bytes": cache_rep["int8_bytes"],
+                "kv_cache_f32_bytes": cache_rep["f32_bytes"],
+                "kv_cache_quant_ratio": round(cache_rep["ratio"], 3),
+            }
+            if kind == "decode" and cache_rep["eligible"]:
+                dec = plan_mod.decode_tile_report(cfg, sh["batch"],
+                                                  sh["seq"])
+                plan_info.update(
+                    decode_visited_tile_steps=dec["visited_tile_steps"],
+                    decode_dense_tile_steps=dec["dense_tile_steps"],
+                    decode_tile_skip_frac=round(dec["skip_frac"], 4),
+                    decode_visited_kv_gbytes=dec["visited_kv_bytes"] / 1e9,
+                    decode_dense_kv_gbytes=dec["dense_kv_bytes"] / 1e9,
+                )
+        except Exception as e:  # noqa: BLE001 - advisory, never fail a cell
+            plan_info = {"serve_plan_error": f"{type(e).__name__}: {e}"[:200]}
     tokens = sh["batch"] * sh["seq"] if kind == "train" else (
         sh["batch"] * sh["seq"] if kind == "prefill" else sh["batch"])
     mult = 6 if kind == "train" else 2
@@ -335,6 +360,17 @@ def dryrun_cell(arch: str, shape_name: str, mesh, *, verbose=True,
                       f"visited vs {result['flash_attn_dense_flops']/1e9:.1f}"
                       f" dense ({result['flash_tile_skip_frac']*100:.0f}% of "
                       f"KV tile-steps skipped)")
+        if "kv_cache_int8_bytes" in result and result["kv_cache_int8_bytes"]:
+            print(f"  kv cache: int8 "
+                  f"{result['kv_cache_int8_bytes']/2**30:.2f} GiB vs f32 "
+                  f"{result['kv_cache_f32_bytes']/2**30:.2f} GiB "
+                  f"({result['kv_cache_quant_ratio']:.2f}x)")
+        if "decode_visited_tile_steps" in result:
+            print(f"  decode tiles: {result['decode_visited_tile_steps']} "
+                  f"visited vs {result['decode_dense_tile_steps']} dense "
+                  f"({result['decode_tile_skip_frac']*100:.0f}% skipped; "
+                  f"kv stream {result['decode_visited_kv_gbytes']:.2f} vs "
+                  f"{result['decode_dense_kv_gbytes']:.2f} GB)")
         print(f"  useful-FLOP fraction {result['useful_flops_frac']:.2f}")
         sys.stdout.flush()
     return result

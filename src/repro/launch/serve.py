@@ -34,10 +34,29 @@ def run(args):
     prompts = jnp.asarray(
         rng.integers(0, cfg.vocab, (args.batch, args.prompt_len)), jnp.int32)
 
+    # honest banner: name what decode will ACTUALLY run — the int8 kvq
+    # kernel only dispatches on a quantized GQA cache (MLA latents and SSM
+    # states take their own decode paths), and the split count is clamped
+    # to the KV tile count of the grown cache
+    s_total = args.prompt_len + args.gen
+    kvq_eligible = cfg.mixer in ("attn", "hybrid") and cfg.mla is None
+    if not kvq_eligible:
+        kv_backend, kv_splits = "n/a (no kvq-layout attention cache)", 1
+    elif quant:
+        from repro.kernels.kvq import ops as kvq_ops
+        kv_backend = args.kv_backend
+        kv_splits = kvq_ops.resolve_splits(s_total, args.kv_splits)
+    else:
+        kv_backend, kv_splits = "jnp (cache not quantized)", 1
+    print(f"kv decode: backend={kv_backend} splits={kv_splits} "
+          f"(requested {args.kv_splits}, cache {s_total} slots)")
+
     prefill = jax.jit(build_prefill_step(cfg, policy_name=args.policy,
                                          quantized=quant))
     decode = jax.jit(build_decode_step(cfg, policy_name=args.policy,
-                                       quantized=quant))
+                                       quantized=quant,
+                                       kvq_backend=args.kv_backend,
+                                       kvq_splits=args.kv_splits))
 
     t0 = time.time()
     batch = {"tokens": prompts}
@@ -95,6 +114,12 @@ def main():
     ap.add_argument("--prompt-len", type=int, default=64)
     ap.add_argument("--gen", type=int, default=32)
     ap.add_argument("--policy", default="bf16")
+    ap.add_argument("--kv-backend", default="ref",
+                    choices=["ref", "interpret", "pallas"],
+                    help="int8 KV decode-attention backend (kernels/kvq)")
+    ap.add_argument("--kv-splits", type=int, default=1,
+                    help="split-K fan-out of the decode grid (clamped to "
+                         "the cache's KV tile count)")
     ap.add_argument("--no-quantize", action="store_true")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--max-model", type=int, default=16)

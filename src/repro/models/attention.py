@@ -240,7 +240,7 @@ def mla_decode(p, x_t, cfg, cache_lat, cache_rope, pos):
 # ---------------------------------------------------------------------------
 def attn_decode(p, x_t, cfg, cache_k, cache_s_k, cache_v, cache_s_v, pos,
                 *, window: int = 0, quantized: bool = True, backend: str = "ref",
-                rolling: bool = False):
+                splits: int = 1, rolling: bool = False):
     """One-token GQA decode against a (possibly int8) cache.
 
     x_t: (B, D_model); cache_k/v: (B, Hkv, S, hd) int8 (or bf16 when not
@@ -248,6 +248,15 @@ def attn_decode(p, x_t, cfg, cache_k, cache_s_k, cache_v, cache_s_v, pos,
     ``rolling``: the cache is a circular window buffer of size S — writes
     land at ``pos % S`` and every filled slot is in-window by construction
     (two-tier cache for windowed layers; EXPERIMENTS §Perf).
+
+    Masking is length-first: rolling buffers and full-causal (static
+    window <= 0) schedules pass per-batch ``lengths`` through to
+    ``decode_attention`` — the split-K kernel skips fully-padded KV tiles
+    and masks the straddling tile with an in-kernel iota compare, and no
+    (B, S) f32 bias tensor is built on ANY backend.  Only schedules
+    lengths can't express (a window band over a non-rolling cache, or a
+    traced per-layer window) fall back to the dense bias.  ``splits``
+    selects the kernel's split-K fan-out.
     Returns (attn_out (B, D_model), new k/v token (B, Hkv, hd)).
     """
     b, _ = x_t.shape
@@ -271,22 +280,25 @@ def attn_decode(p, x_t, cfg, cache_k, cache_s_k, cache_v, cache_s_v, pos,
     v_new = v_t[:, 0]
 
     kv_pos = jnp.arange(s_max)
+    lengths = bias = None
     if rolling:
         write_at = pos % s_max
         # slot j is filled iff j <= pos (pre-wrap) or always (post-wrap);
         # all filled slots are within the window by construction
-        valid = kv_pos[None, :] <= pos
+        lengths = jnp.broadcast_to(jnp.minimum(pos + 1, s_max), (b,))
     else:
         write_at = pos
-        valid = kv_pos[None, :] <= pos                     # includes current
-        if isinstance(window, int):
-            if window > 0:
-                valid &= kv_pos[None, :] > pos - window
+        if isinstance(window, int) and window <= 0:
+            lengths = jnp.broadcast_to(pos + 1, (b,))      # includes current
         else:
-            valid &= jnp.where(window > 0,
-                               kv_pos[None, :] > pos - window, True)
-    bias = jnp.where(valid, 0.0, NEG_INF).astype(jnp.float32)
-    bias = jnp.broadcast_to(bias, (b, s_max))
+            valid = kv_pos[None, :] <= pos                 # includes current
+            if isinstance(window, int):
+                valid &= kv_pos[None, :] > pos - window
+            else:
+                valid &= jnp.where(window > 0,
+                                   kv_pos[None, :] > pos - window, True)
+            bias = jnp.where(valid, 0.0, NEG_INF).astype(jnp.float32)
+            bias = jnp.broadcast_to(bias, (b, s_max))
 
     if quantized:
         kq_new, ks_new = kvq_ops.quantize_kv(k_new)
@@ -299,8 +311,9 @@ def attn_decode(p, x_t, cfg, cache_k, cache_s_k, cache_v, cache_s_v, pos,
                                            (0, 0, write_at))
         csv = jax.lax.dynamic_update_slice(cache_s_v, vs_new[:, :, None],
                                            (0, 0, write_at))
-        out = kvq_ops.decode_attention(q, ck, csk, cv, csv, bias=bias,
-                                       backend=backend)
+        out = kvq_ops.decode_attention(q, ck, csk, cv, csv, lengths=lengths,
+                                       bias=bias, backend=backend,
+                                       splits=splits)
     else:
         ck = jax.lax.dynamic_update_slice(
             cache_k, k_new[:, :, None].astype(cache_k.dtype),
@@ -311,8 +324,11 @@ def attn_decode(p, x_t, cfg, cache_k, cache_s_k, cache_v, cache_s_v, pos,
         csk, csv = cache_s_k, cache_s_v
         g = h // hkv
         qg = q.reshape(b, hkv, g, hd).astype(jnp.float32)
-        logits = jnp.einsum("bhgd,bhsd->bhgs", qg, ck.astype(jnp.float32))
-        logits = logits * hd ** -0.5 + bias[:, None, None]
+        # one arithmetic source for the decode mask (lengths iota compare /
+        # bias add): shared with the kvq ref oracle so paths can't drift
+        from repro.kernels.kvq.ref import masked_decode_logits
+        logits = masked_decode_logits(qg, ck.astype(jnp.float32),
+                                      hd ** -0.5, bias, lengths)
         pr = jax.nn.softmax(logits, -1)
         out = jnp.einsum("bhgs,bhsd->bhgd", pr, cv.astype(jnp.float32)
                          ).reshape(b, h, hd)

@@ -514,8 +514,14 @@ def init_cache_two_tier(cfg: ModelConfig, batch: int, s_max: int, *,
 
 def decode_step_two_tier(params, cfg: ModelConfig, cache: dict, tokens_t, *,
                          policy: Policy = Policy.full(), quantized: bool = True,
-                         kvq_backend: str = "ref", mesh=None):
-    """Single-token decode over a two-tier cache (see init_cache_two_tier)."""
+                         kvq_backend: str = "ref", kvq_splits: int = 1,
+                         mesh=None):
+    """Single-token decode over a two-tier cache (see init_cache_two_tier).
+
+    Every layer takes the lengths-aware decode path: window layers roll a
+    W-slot buffer (their split-K axis statically shrinks to ~W/BS tiles),
+    global layers pass ``lengths = pos + 1`` — no bias tensors anywhere.
+    """
     params = policy.cast_to_compute(params)
     pos = cache["pos"]
     x = params["embed"][tokens_t]
@@ -530,7 +536,7 @@ def decode_step_two_tier(params, cfg: ModelConfig, cache: dict, tokens_t, *,
             mix, (ck, csk, cv, csv) = attn.attn_decode(
                 p_layer["attn"], h, cfg, lc["k"], lc["k_scale"], lc["v"],
                 lc["v_scale"], pos, window=0, quantized=quantized,
-                backend=kvq_backend, rolling=rolling)
+                backend=kvq_backend, splits=kvq_splits, rolling=rolling)
             new_lc.update(k=ck, k_scale=csk, v=cv, v_scale=csv)
             if cfg.mixer == "hybrid":
                 s_mix, nconv, nssm = ssm_mod.ssm_decode_step(
@@ -619,18 +625,28 @@ def init_cache(cfg: ModelConfig, batch: int, s_max: int, *,
 
 def decode_step(params, cfg: ModelConfig, cache: dict, tokens_t, *,
                 policy: Policy = Policy.full(), quantized: bool = True,
-                kvq_backend: str = "ref", enc_out=None,
+                kvq_backend: str = "ref", kvq_splits: int = 1, enc_out=None,
                 scan_unroll: int = 1, mesh=None):
-    """tokens_t: (B,) int32 current token.  Returns (logits (B,V), cache)."""
+    """tokens_t: (B,) int32 current token.  Returns (logits (B,V), cache).
+
+    Uniform window schedules pass the window as a STATIC python int (same
+    gate as ``forward``), so ``attn_decode`` can take the lengths-aware
+    kvq path — per-batch lengths + split-K tile skipping instead of a
+    dense (B, S) bias; per-layer overrides (``cfg.global_layers``) scan a
+    traced window and keep the documented bias fallback (hybrid archs
+    serve through ``decode_step_two_tier`` to avoid it entirely).
+    """
     params = policy.cast_to_compute(params)
     pos = cache["pos"]
     x = params["embed"][tokens_t]                           # (B, D)
-    windows = layer_windows(cfg)
+    static_window = int(cfg.window) if not cfg.global_layers else None
+    windows = None if static_window is not None else layer_windows(cfg)
 
     layer_caches = {k: v for k, v in cache.items() if k != "pos"}
 
     def body(carry, xs):
-        p_layer, lc, win = xs["p"], xs["c"], xs["w"]
+        p_layer, lc = xs["p"], xs["c"]
+        win = static_window if static_window is not None else xs["w"]
         x = carry
         h = rms_norm(x[:, None], p_layer["ln1"], cfg.norm_eps, bf16_grad=cfg.norm_bf16_grad)[:, 0]
         new_lc = dict(lc)
@@ -642,7 +658,7 @@ def decode_step(params, cfg: ModelConfig, cache: dict, tokens_t, *,
             mix, (ck, csk, cv, csv) = attn.attn_decode(
                 p_layer["attn"], h, cfg, lc["k"], lc["k_scale"], lc["v"],
                 lc["v_scale"], pos, window=win, quantized=quantized,
-                backend=kvq_backend)
+                backend=kvq_backend, splits=kvq_splits)
             new_lc.update(k=ck, k_scale=csk, v=cv, v_scale=csv)
         if cfg.mixer == "ssm":
             mix, nconv, nssm = ssm_mod.ssm_decode_step(
@@ -669,9 +685,10 @@ def decode_step(params, cfg: ModelConfig, cache: dict, tokens_t, *,
             x = x + ffn_out[:, 0]
         return x, new_lc
 
-    x, new_caches = jax.lax.scan(
-        body, x, {"p": params["blocks"], "c": layer_caches, "w": windows},
-        unroll=scan_unroll)
+    xs = {"p": params["blocks"], "c": layer_caches}
+    if static_window is None:
+        xs["w"] = windows
+    x, new_caches = jax.lax.scan(body, x, xs, unroll=scan_unroll)
     x = rms_norm(x[:, None], params["final_norm"], cfg.norm_eps, bf16_grad=cfg.norm_bf16_grad)[:, 0]
     head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
     logits = _mask_padded_vocab((x @ head).astype(policy.output_dtype), cfg)

@@ -4,11 +4,12 @@ for checkpoint placement, and the resulting :class:`RematPlan` is executed
 by ``repro.core.checkpoint.CheckpointConfig(plan=...)`` — the single remat
 entry point for every model stack."""
 from repro.plan.profile import (ChainProfile, attn_resid_bytes,
-                                flash_attn_flop_report,
+                                decode_tile_report, flash_attn_flop_report,
                                 flash_bwd_recompute_flops,
-                                flash_training_eligible, plan_for_budget,
-                                plan_min_peak, plan_report, profile_resnet,
-                                profile_sequential, profile_transformer)
+                                flash_training_eligible, kv_cache_report,
+                                plan_for_budget, plan_min_peak, plan_report,
+                                profile_resnet, profile_sequential,
+                                profile_transformer)
 from repro.plan.solver import (RematPlan, budget_boundaries,
                                min_peak_boundaries, plan_metrics)
 
@@ -17,6 +18,7 @@ __all__ = [
     "profile_sequential", "profile_resnet", "profile_transformer",
     "attn_resid_bytes", "flash_attn_flop_report",
     "flash_bwd_recompute_flops", "flash_training_eligible",
+    "decode_tile_report", "kv_cache_report",
     "plan_min_peak", "plan_for_budget", "plan_report",
     "min_peak_boundaries", "budget_boundaries", "plan_metrics",
 ]

@@ -254,6 +254,97 @@ def flash_attn_flop_report(cfg, b: int, s: int) -> dict:
             "visited_tile_steps": vis_steps, "dense_tile_steps": dense_steps}
 
 
+def decode_tile_report(cfg, b: int, s: int, *, lengths=None, splits: int = 1,
+                       block_s: int | None = None) -> dict:
+    """Visited-vs-dense tile accounting for split-K int8 KV decode.
+
+    The serve-side mirror of :func:`flash_attn_flop_report`: per layer,
+    how many KV tile-steps the length-aware split-K decode kernel
+    (``kernels/kvq``) actually executes versus the dense per-(batch,
+    kv-head) sweep a length- and window-blind kernel over the full
+    S-slot single-tier cache would pay, with the FLOPs and int8 cache
+    bytes those tiles carry.  Visited counts come from the SAME
+    ``tiling.decode_tile_step_counts`` bounds the kernel builds its grid
+    and early-outs from, so the report and the measured ``debug_counts``
+    counters agree tile-for-tile by construction.
+
+    Two-tier geometry is honored: windowed layers (``cfg.window`` > 0,
+    not in ``cfg.global_layers``) serve from a rolling W-slot buffer, so
+    their per-layer cache length — and with it the split-K axis — shrinks
+    statically to ~W/BS tiles (``min(window, s)``), and per-batch
+    ``lengths`` clamp to it.  ``lengths=None`` budgets a full cache
+    (steady-state worst case); pass the ragged batch for serving-time
+    accounting.
+    """
+    from repro.kernels import tiling
+    from repro.models import transformer
+    zeros = {"eligible": False, "visited_tile_steps": 0,
+             "dense_tile_steps": 0, "visited_flops": 0.0, "dense_flops": 0.0,
+             "visited_kv_bytes": 0, "dense_kv_bytes": 0, "skip_frac": 0.0,
+             "per_layer": []}
+    if cfg.mixer not in ("attn", "hybrid") or cfg.mla is not None:
+        return zeros                 # MLA/SSM caches aren't the kvq layout
+    if lengths is not None and len(lengths) != b:
+        raise ValueError(f"decode_tile_report: {len(lengths)} lengths for "
+                         f"batch {b} — the visited/dense ratio would mix "
+                         f"batch sizes")
+    lens = [s] * b if lengths is None else [int(x) for x in lengths]
+    hkv, g, d = cfg.n_kv, cfg.n_heads // cfg.n_kv, cfg.head_dim
+    bs_kw = {} if block_s is None else {"block_s": block_s}
+    # dense baseline: the old sequential sweep over a full S-slot
+    # single-tier cache, every tile visited (no lengths, no two-tier)
+    c_full = tiling.decode_tile_step_counts(s, None, **bs_kw)
+    per_layer = []
+    visited = dense = vis_fl = den_fl = vis_by = den_by = 0
+    for w in (int(x) for x in transformer.layer_windows(cfg)):
+        s_l = s if w <= 0 else min(w, s)
+        c = tiling.decode_tile_step_counts(
+            s_l, [min(ln, s_l) for ln in lens], splits=splits, **bs_kw)
+        vis, den = c["visited"], b * c_full["ns"]
+        # per (batch, kv-head) tile-step: QK^T (G,D)x(D,BS) + PV
+        # (G,BS)x(BS,D) = 4*G*D*BS flops; int8 K+V tiles + f32 scales
+        tile_fl = lambda bs_: 4.0 * g * d * bs_ * hkv
+        tile_by = lambda bs_: hkv * (2 * bs_ * d + 2 * bs_ * 4)
+        per_layer.append({"window": w, "cache_len": s_l, "bs": c["bs"],
+                          "splits": c["splits"], "visited": vis,
+                          "dense": den})
+        visited += vis
+        dense += den
+        vis_fl += vis * tile_fl(c["bs"])
+        den_fl += den * tile_fl(c_full["bs"])
+        vis_by += vis * tile_by(c["bs"])
+        den_by += den * tile_by(c_full["bs"])
+    return {"eligible": True, "visited_tile_steps": visited,
+            "dense_tile_steps": dense, "visited_flops": vis_fl,
+            "dense_flops": den_fl, "visited_kv_bytes": vis_by,
+            "dense_kv_bytes": den_by,
+            "skip_frac": 1.0 - (visited / dense if dense else 0.0),
+            "per_layer": per_layer}
+
+
+def kv_cache_report(cfg, b: int, s: int) -> dict:
+    """int8-vs-f32 KV-cache bytes at serve time, two-tier aware.
+
+    int8 counts the deployed encoding (1 B/elem K+V plus the two f32
+    per-token scale rows); f32 is the un-encoded strawman.  Windowed
+    layers are sized at their rolling ``min(window, s)`` buffer — the
+    same geometry :func:`decode_tile_report` budgets tiles on.
+    """
+    from repro.models import transformer
+    if cfg.mixer not in ("attn", "hybrid") or cfg.mla is not None:
+        return {"eligible": False, "int8_bytes": 0, "f32_bytes": 0,
+                "ratio": 0.0}
+    hkv, d = cfg.n_kv, cfg.head_dim
+    int8 = f32 = 0
+    for w in (int(x) for x in transformer.layer_windows(cfg)):
+        s_l = s if w <= 0 else min(w, s)
+        tokens = b * hkv * s_l
+        int8 += 2 * tokens * d + 2 * tokens * 4
+        f32 += 2 * tokens * d * 4
+    return {"eligible": True, "int8_bytes": int8, "f32_bytes": f32,
+            "ratio": f32 / int8 if int8 else 0.0}
+
+
 def profile_transformer(cfg, batch_sds, *, dtype_bytes: int = 2,
                         flash_resid_bytes: "int | None" = None
                         ) -> ChainProfile:

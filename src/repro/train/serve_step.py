@@ -35,7 +35,7 @@ def build_prefill_step(cfg: ModelConfig, *, policy_name: str = "bf16",
 
 def build_decode_step(cfg: ModelConfig, *, policy_name: str = "bf16",
                       quantized: bool = True, kvq_backend: str = "ref",
-                      scan_unroll: int = 1, mesh=None):
+                      kvq_splits: int = 1, scan_unroll: int = 1, mesh=None):
     policy = get_policy(policy_name)
 
     def step(params, cache, tokens_t, enc_out=None):
@@ -43,7 +43,7 @@ def build_decode_step(cfg: ModelConfig, *, policy_name: str = "bf16",
         logits, cache = transformer.decode_step(
             params, cfg, cache, tokens_t, policy=policy,
             quantized=quantized, kvq_backend=kvq_backend,
-            scan_unroll=scan_unroll, mesh=mesh, **kw)
+            kvq_splits=kvq_splits, scan_unroll=scan_unroll, mesh=mesh, **kw)
         return logits, cache
 
     return step
@@ -52,10 +52,13 @@ def build_decode_step(cfg: ModelConfig, *, policy_name: str = "bf16",
 def make_serve_steps(cfg: ModelConfig, mesh, input_sds: dict, *,
                      kind: str, policy_name: str = "bf16",
                      quantized: bool = True, donate: bool = True,
+                     kvq_backend: str = "ref", kvq_splits: int = 1,
                      scan_unroll: int = 1):
     """jit the prefill or decode step with explicit shardings.
 
     ``input_sds`` comes from repro.configs.input_specs for the cell.
+    ``kvq_backend``/``kvq_splits`` select the int8 decode-attention kernel
+    and its split-K fan-out (decode cells only).
     """
     params_sds = jax.eval_shape(
         lambda: transformer.init_params(cfg, jax.random.PRNGKey(0)))
@@ -77,6 +80,7 @@ def make_serve_steps(cfg: ModelConfig, mesh, input_sds: dict, *,
 
     assert kind == "decode", kind
     fn = build_decode_step(cfg, policy_name=policy_name, quantized=quantized,
+                           kvq_backend=kvq_backend, kvq_splits=kvq_splits,
                            scan_unroll=scan_unroll, mesh=mesh)
     cache_sds = input_sds["cache"]
     c_shard = shd.to_shardings(mesh, shd.cache_specs(cfg, cache_sds, mesh))

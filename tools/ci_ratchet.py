@@ -20,9 +20,12 @@ import xml.etree.ElementTree as ET
 # PR 2 (trainable flash attention: kernel-gradient + planner-residual
 # tests): 0 failed / 185 passed; PR 3 (sparse flash grids: tile-bound
 # sweep, counter-vs-analytic, skip-ratio acceptance, resid policy, kvq
-# no-bias): 0 failed / 239 passed.
+# no-bias): 0 failed / 239 passed; PR 4 (split-K int8 flash decode:
+# ragged-length parity, split/merge oracle, decode counters, skip-ratio
+# floor, no-bias jaxprs, planner decode reports, serve CLI): 0 failed /
+# 275 passed.
 MAX_FAILED = 0
-MIN_PASSED = 239
+MIN_PASSED = 275
 
 
 def main() -> int:
