@@ -24,6 +24,10 @@
                   (interpret mode), dense-vs-visited tile claw-back on a
                   ragged S=2048 batch, and the planner's serve-side
                   reports (writes BENCH_decode.json).
+  serve_trace     continuous batching vs the lockstep driver on the same
+                  ragged request trace: useful tokens/s, TTFT (steps),
+                  slot occupancy and wasted slot-steps (writes
+                  BENCH_serve.json).
 
 Prints ``name,us_per_call,derived`` CSV rows (plus derived metrics).
 """
@@ -539,6 +543,111 @@ def flash_decode():
     print(f"# wrote {os.path.normpath(path)}", flush=True)
 
 
+def serve_trace():
+    """Continuous batching vs lockstep on one ragged trace (ISSUE 5
+    acceptance): the engine joins requests mid-flight and retires them at
+    their own length, so no slot pays for the slowest request; lockstep
+    groups the same requests into fixed batches, pads every prompt to the
+    group max, and decodes the group's max generation length for
+    everyone.  Useful tokens (each request's own gen budget) per wall
+    second is the headline; wasted slot-steps make the padding cost
+    explicit.  Writes BENCH_serve.json.
+    """
+    import json
+    import os
+
+    from repro import configs
+    from repro.models import transformer
+    from repro.serve import ServeEngine, synthetic_trace
+    from repro.train.serve_step import build_decode_step, build_prefill_step
+
+    cfg = configs.smoke_config("llama3-8b")
+    params = transformer.init_params(cfg, jax.random.PRNGKey(0))
+    slots, max_len, bucket = 4, 96, 16
+    trace = synthetic_trace(12, seed=7, vocab=cfg.vocab, mean_prompt=10,
+                            max_prompt=bucket, mean_gen=16, max_gen=48,
+                            arrival_rate=1.0)
+    useful = sum(r.max_new_tokens for r in trace)
+
+    # ---- continuous batching
+    eng = ServeEngine(params, cfg, max_slots=slots, max_len=max_len,
+                      prompt_buckets=(bucket,), seed=0)
+    compiles = eng.warmup()
+    t0 = time.perf_counter()
+    summary = eng.run(trace)
+    wall_e = time.perf_counter() - t0
+    assert eng.compile_counts() == compiles, "engine re-jitted mid-trace"
+    assert summary["total_tokens"] == useful
+
+    # ---- lockstep baseline: same trace, fixed FCFS groups of `slots`
+    prefill = jax.jit(build_prefill_step(cfg, quantized=True,
+                                         s_max=max_len))
+    decode = jax.jit(build_decode_step(cfg, quantized=True))
+    groups = [trace[i:i + slots] for i in range(0, len(trace), slots)]
+
+    def run_lockstep():
+        slot_steps = ttfts = 0
+        step_clock = 0
+        for g in groups:
+            toks = np.zeros((slots, bucket), np.int32)
+            for j, r in enumerate(g):
+                toks[j, :len(r.prompt)] = r.prompt      # pad to the bucket
+            # the whole group must have arrived before a lockstep batch
+            # can prefill, and it holds all slots for the group max
+            step_clock = max(step_clock, max(r.arrival_step for r in g))
+            logits, cache = prefill(params, {"tokens": jnp.asarray(toks)})
+            tok = jnp.asarray(logits.argmax(-1), jnp.int32)
+            np.asarray(tok)          # serving streams every token out
+            ttfts += sum(step_clock + 1 - r.arrival_step for r in g)
+            g_steps = max(r.max_new_tokens for r in g)
+            for _ in range(g_steps - 1):
+                lg, cache = decode(params, cache, tok)
+                tok = jnp.asarray(lg.argmax(-1), jnp.int32)
+                np.asarray(tok)      # same per-step delivery the engine pays
+            step_clock += g_steps
+            slot_steps += g_steps * slots
+        return slot_steps, ttfts / len(trace)
+
+    run_lockstep()                                      # compile warmup
+    t0 = time.perf_counter()
+    slot_steps, ttft_lock = run_lockstep()
+    wall_l = time.perf_counter() - t0
+
+    tps_e = useful / wall_e
+    tps_l = useful / wall_l
+    out = {
+        "trace": {"requests": len(trace), "useful_tokens": useful,
+                  "slots": slots, "max_len": max_len,
+                  "gen_lengths": [r.max_new_tokens for r in trace]},
+        "continuous": {
+            "tokens_per_s": round(tps_e, 1), "wall_s": round(wall_e, 3),
+            "ttft_mean_steps": round(summary["ttft_mean_steps"], 2),
+            "occupancy_mean": round(summary["occupancy_mean"], 2),
+            "engine_steps": summary["n_steps"],
+            "wasted_slot_steps": summary["n_steps"] * slots - useful,
+        },
+        "lockstep": {
+            "tokens_per_s": round(tps_l, 1), "wall_s": round(wall_l, 3),
+            "ttft_mean_steps": round(ttft_lock, 2),
+            "decode_slot_steps": slot_steps,
+            "wasted_slot_steps": slot_steps - useful,
+        },
+        "speedup_tokens_per_s": round(tps_e / tps_l, 2),
+    }
+    _rows("serve_trace_continuous", wall_e * 1e6,
+          f"tok_s={tps_e:.1f},occ={summary['occupancy_mean']:.2f}")
+    _rows("serve_trace_lockstep", wall_l * 1e6, f"tok_s={tps_l:.1f}")
+    _rows("serve_trace_speedup", 0.0, f"{tps_e/tps_l:.2f}x")
+    assert tps_e > tps_l, (
+        f"continuous batching ({tps_e:.1f} tok/s) must beat lockstep "
+        f"({tps_l:.1f} tok/s) on a ragged trace")
+
+    path = os.path.join(os.path.dirname(__file__), "..", "BENCH_serve.json")
+    with open(path, "w") as f:
+        json.dump(out, f, indent=1, sort_keys=True)
+    print(f"# wrote {os.path.normpath(path)}", flush=True)
+
+
 def tbl_codec():
     """Codec throughput + ratios (paper claims up-to 16x passage saving)."""
     from repro.core import encoding
@@ -625,12 +734,18 @@ def tbl_compression():
 
 BENCHES = [tbl_codec, tbl_pipeline, tbl_compression, fig8_memory,
            fig10_pipelines, plan_vs_uniform, flash_fwd_bwd, flash_decode,
-           fig9_time_acc]
+           serve_trace, fig9_time_acc]
 
 
 def main() -> None:
+    import sys
+    wanted = set(sys.argv[1:])
+    benches = [b for b in BENCHES if not wanted or b.__name__ in wanted]
+    if wanted and not benches:
+        raise SystemExit(f"unknown benchmark(s) {sorted(wanted)}; "
+                         f"known: {[b.__name__ for b in BENCHES]}")
     print("name,us_per_call,derived")
-    for b in BENCHES:
+    for b in benches:
         t0 = time.time()
         b()
         print(f"# {b.__name__} done in {time.time()-t0:.1f}s", flush=True)

@@ -38,26 +38,15 @@ def main():
     prompts = jnp.asarray(
         rng.integers(0, cfg.vocab, (args.batch, args.prompt_len)), jnp.int32)
 
-    prefill = jax.jit(build_prefill_step(cfg, policy_name="bf16",
-                                         quantized=quant))
+    # prefill preallocates the decode cache at prompt + gen inside the jit
+    prefill = jax.jit(build_prefill_step(
+        cfg, policy_name="bf16", quantized=quant,
+        s_max=args.prompt_len + args.gen))
     decode = jax.jit(build_decode_step(cfg, policy_name="bf16",
                                        quantized=quant))
 
     t0 = time.time()
     last_logits, cache = prefill(params, {"tokens": prompts})
-    # grow the cache to prompt + gen: pad the sequence dim
-    def grow(path, x):
-        name = str(path[-1].key)
-        if name in ("k", "v"):
-            pad = [(0, 0)] * x.ndim
-            pad[3] = (0, args.gen)
-            return jnp.pad(x, pad)
-        if name in ("k_scale", "v_scale"):
-            return jnp.pad(x, [(0, 0)] * (x.ndim - 1) + [(0, args.gen)])
-        if name in ("mla_lat", "mla_rope"):
-            return jnp.pad(x, [(0, 0), (0, 0), (0, args.gen), (0, 0)])
-        return x
-    cache = jax.tree_util.tree_map_with_path(grow, cache)
     tok = jnp.asarray(last_logits.argmax(-1), jnp.int32)
     t_prefill = time.time() - t0
 

@@ -1,7 +1,16 @@
-"""Production serving driver: batched prefill + decode with int8 KV cache.
+"""Production serving driver: continuous-batching engine or lockstep demo.
+
+Engine mode (``--engine``) drives ``repro.serve.ServeEngine`` over a
+seeded synthetic request trace — slot-pooled int8 KV cache, FCFS
+admission, mid-flight joins/retirements with zero re-jits after warmup:
 
     PYTHONPATH=src python -m repro.launch.serve --arch llama3-8b --smoke \
-        --batch 4 --prompt-len 64 --gen 32
+        --engine --requests 16 --max-slots 4 --max-len 128
+
+The default (lockstep) mode keeps the original demo: one fixed batch
+prefills once and decodes ``--gen`` steps in unison — every slot pays for
+the slowest request.  Both modes share the seeded sampler
+(``--temperature`` / ``--top-k``; greedy stays the default).
 
 Serving-side fault tolerance: the decode loop is stateless beyond the
 cache, so a restart re-prefills in one step; the watchdog flags stuck
@@ -20,25 +29,16 @@ from repro import configs
 from repro.launch.mesh import describe, make_mesh_for
 from repro.launch.train import Watchdog
 from repro.models import transformer
+from repro.serve import sampling
 from repro.train.serve_step import build_decode_step, build_prefill_step
 
 
-def run(args):
-    mesh = make_mesh_for(max_model=args.max_model)
-    print(f"mesh: {describe(mesh)}")
-    cfg = configs.smoke_config(args.arch) if args.smoke \
-        else configs.get_config(args.arch)
+def _kv_banner(cfg, args, s_total: int):
+    """Honest banner: name what decode will ACTUALLY run — the int8 kvq
+    kernel only dispatches on a quantized GQA cache (MLA latents and SSM
+    states take their own decode paths), and the split count is clamped
+    to the KV tile count of the preallocated cache."""
     quant = not args.no_quantize
-    params = transformer.init_params(cfg, jax.random.PRNGKey(args.seed))
-    rng = np.random.default_rng(args.seed)
-    prompts = jnp.asarray(
-        rng.integers(0, cfg.vocab, (args.batch, args.prompt_len)), jnp.int32)
-
-    # honest banner: name what decode will ACTUALLY run — the int8 kvq
-    # kernel only dispatches on a quantized GQA cache (MLA latents and SSM
-    # states take their own decode paths), and the split count is clamped
-    # to the KV tile count of the grown cache
-    s_total = args.prompt_len + args.gen
     kvq_eligible = cfg.mixer in ("attn", "hybrid") and cfg.mla is None
     if not kvq_eligible:
         kv_backend, kv_splits = "n/a (no kvq-layout attention cache)", 1
@@ -51,12 +51,87 @@ def run(args):
     print(f"kv decode: backend={kv_backend} splits={kv_splits} "
           f"(requested {args.kv_splits}, cache {s_total} slots)")
 
+
+def run_engine(args, cfg, params) -> int:
+    from repro.serve import ServeEngine, supports, synthetic_trace
+
+    if not supports(cfg):
+        print(f"engine: {cfg.arch_id} is not engine-eligible (needs a "
+              f"uniform-window GQA attention cache — MLA/SSM/encoder/"
+              f"global-layer archs serve through the lockstep driver)")
+        return 2
+    quant = not args.no_quantize
+    _kv_banner(cfg, args, args.max_len)
+    budget = (int(args.mem_budget_mb * 2**20)
+              if args.mem_budget_mb else None)
+    engine = ServeEngine(
+        params, cfg, max_slots=args.max_slots, max_len=args.max_len,
+        policy_name=args.policy, quantized=quant,
+        kv_backend=args.kv_backend, kv_splits=args.kv_splits,
+        temperature=args.temperature, top_k=args.top_k, seed=args.seed,
+        max_prefill_per_step=args.max_prefill_per_step,
+        mem_budget_bytes=budget)
+    # one source of truth for capacity: the engine's own clamp/accounting
+    print(f"capacity: {engine.pool.bytes_per_slot()/2**20:.2f} MB/slot at "
+          f"max_len={args.max_len}"
+          + (f" -> budget {args.mem_budget_mb} MB admits "
+             f"{engine.pool.max_slots} of "
+             f"{args.max_slots} requested slots" if budget else ""))
+    t0 = time.time()
+    compiles = engine.warmup()
+    print(f"warmup: {time.time()-t0:.1f}s, programs={compiles}")
+
+    # size the trace to what the engine can admit: prompts within the
+    # largest bucket, prompt+gen within max_len
+    max_prompt = min(engine.buckets[-1], max(4, args.max_len // 2))
+    trace = synthetic_trace(
+        args.requests, seed=args.seed, vocab=cfg.vocab,
+        mean_prompt=args.mean_prompt, max_prompt=max_prompt,
+        mean_gen=args.mean_gen, max_gen=max(1, args.max_len - max_prompt),
+        arrival_rate=args.arrival_rate, min_prompt=min(4, max_prompt))
+    t0 = time.time()
+    summary = engine.run(trace)
+    wall = time.time() - t0
+    assert engine.compile_counts() == compiles, \
+        "recompile during serving (static-shape contract broken)"
+    print(f"trace: {args.requests} requests in {wall:.2f}s "
+          f"({summary['n_steps']} engine steps)")
+    print(f"throughput: {summary['tokens_per_s']:.1f} tok/s "
+          f"({summary['total_tokens']} tokens)")
+    print(f"ttft: mean {summary['ttft_mean_s']*1e3:.1f} ms "
+          f"(p95 {summary['ttft_p95_s']*1e3:.1f} ms, "
+          f"{summary['ttft_mean_steps']:.1f} steps); "
+          f"itl: {summary['itl_mean_s']*1e3:.1f} ms")
+    print(f"occupancy: {summary['occupancy_mean']:.2f}/"
+          f"{engine.pool.max_slots} slots "
+          f"(queue depth mean {summary['queue_depth_mean']:.2f}, "
+          f"max {summary['queue_depth_max']})")
+    assert summary["n_done"] == args.requests
+    assert engine.pool.occupancy == 0 and \
+        engine.pool.allocs == engine.pool.frees, "slot leak"
+    return 0
+
+
+def run_lockstep(args, cfg, params) -> int:
+    quant = not args.no_quantize
+    rng = np.random.default_rng(args.seed)
+    prompts = jnp.asarray(
+        rng.integers(0, cfg.vocab, (args.batch, args.prompt_len)), jnp.int32)
+
+    s_total = args.prompt_len + args.gen
+    _kv_banner(cfg, args, s_total)
+
+    # the decode cache is preallocated at prompt_len + gen INSIDE the
+    # compiled prefill (grow_cache) — no post-hoc host-side pad
     prefill = jax.jit(build_prefill_step(cfg, policy_name=args.policy,
-                                         quantized=quant))
+                                         quantized=quant, s_max=s_total))
     decode = jax.jit(build_decode_step(cfg, policy_name=args.policy,
                                        quantized=quant,
                                        kvq_backend=args.kv_backend,
                                        kvq_splits=args.kv_splits))
+    sampler = sampling.make_sampler(temperature=args.temperature,
+                                    top_k=args.top_k)
+    key = jax.random.PRNGKey(args.seed)
 
     t0 = time.time()
     batch = {"tokens": prompts}
@@ -64,19 +139,7 @@ def run(args):
         batch["frames"] = jnp.zeros(
             (args.batch, cfg.encoder.n_frames, cfg.d_model), jnp.float32)
     last_logits, cache = prefill(params, batch)
-
-    def grow(path, x):
-        name = str(path[-1].key)
-        if name in ("k", "v"):
-            return jnp.pad(x, [(0, 0)] * 3 + [(0, args.gen), (0, 0)])
-        if name in ("k_scale", "v_scale"):
-            return jnp.pad(x, [(0, 0)] * (x.ndim - 1) + [(0, args.gen)])
-        if name in ("mla_lat", "mla_rope"):
-            return jnp.pad(x, [(0, 0), (0, 0), (0, args.gen), (0, 0)])
-        return x
-
-    cache = jax.tree_util.tree_map_with_path(grow, cache)
-    tok = jnp.asarray(last_logits.argmax(-1), jnp.int32)
+    tok = sampler(last_logits, jax.random.fold_in(key, 0))
     t_prefill = time.time() - t0
 
     wd = Watchdog()
@@ -86,10 +149,10 @@ def run(args):
         dec_kw["enc_out"] = batch["frames"]
     t0 = time.time()
     try:
-        for _ in range(args.gen - 1):
+        for i in range(args.gen - 1):
             wd.step_start()
             logits, cache = decode(params, cache, tok, **dec_kw)
-            tok = jnp.asarray(logits.argmax(-1), jnp.int32)
+            tok = sampler(logits, jax.random.fold_in(key, i + 1))
             out_tokens.append(np.asarray(tok))
             wd.step_end()
     finally:
@@ -104,6 +167,17 @@ def run(args):
     print(f"sample: {gen[0][:12].tolist()}")
     assert np.isfinite(gen).all()
     return 0
+
+
+def run(args):
+    mesh = make_mesh_for(max_model=args.max_model)
+    print(f"mesh: {describe(mesh)}")
+    cfg = configs.smoke_config(args.arch) if args.smoke \
+        else configs.get_config(args.arch)
+    params = transformer.init_params(cfg, jax.random.PRNGKey(args.seed))
+    if args.engine:
+        return run_engine(args, cfg, params)
+    return run_lockstep(args, cfg, params)
 
 
 def main():
@@ -121,8 +195,33 @@ def main():
                     help="split-K fan-out of the decode grid (clamped to "
                          "the cache's KV tile count)")
     ap.add_argument("--no-quantize", action="store_true")
+    ap.add_argument("--temperature", type=float, default=0.0,
+                    help="sampling temperature (0 = greedy, the default)")
+    ap.add_argument("--top-k", type=int, default=0,
+                    help="restrict sampling to the top-k logits (0 = all)")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--max-model", type=int, default=16)
+    # -- continuous-batching engine mode ----------------------------------
+    ap.add_argument("--engine", action="store_true",
+                    help="serve a synthetic request trace through the "
+                         "continuous-batching engine (repro.serve)")
+    ap.add_argument("--requests", type=int, default=16,
+                    help="engine: number of trace requests")
+    ap.add_argument("--max-slots", type=int, default=4,
+                    help="engine: resident request slots in the KV pool")
+    ap.add_argument("--max-len", type=int, default=128,
+                    help="engine: per-slot cache length (prompt + gen cap)")
+    ap.add_argument("--mean-prompt", type=int, default=24,
+                    help="engine: mean trace prompt length")
+    ap.add_argument("--mean-gen", type=int, default=12,
+                    help="engine: mean trace generation length")
+    ap.add_argument("--arrival-rate", type=float, default=0.5,
+                    help="engine: trace arrivals per engine step")
+    ap.add_argument("--max-prefill-per-step", type=int, default=1,
+                    help="engine: prefill-vs-decode interleave quota")
+    ap.add_argument("--mem-budget-mb", type=float, default=0.0,
+                    help="engine: clamp resident slots to this KV-pool "
+                         "budget (plan.serve_capacity_report)")
     return run(ap.parse_args())
 
 

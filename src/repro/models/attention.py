@@ -238,13 +238,37 @@ def mla_decode(p, x_t, cfg, cache_lat, cache_rope, pos):
 # ---------------------------------------------------------------------------
 # Cached single-token decode.
 # ---------------------------------------------------------------------------
+def _write_token(cache, new, at):
+    """Write one token into the S axis of a per-layer cache leaf.
+
+    cache: (B, Hkv, S, hd) or (B, Hkv, S); new: (B, Hkv, hd) / (B, Hkv);
+    at: scalar int32 (lockstep batch — every row writes the same slot) or
+    (B,) int32 (slot-pooled serving — each row writes at its own length).
+    The vector case lowers to a per-row dynamic_update_slice under vmap
+    (a scatter), keeping the write O(1) in S instead of a full-cache
+    ``where`` rewrite.
+    """
+    if at.ndim == 0:
+        return jax.lax.dynamic_update_slice(
+            cache, new[:, :, None], (0, 0, at, 0)[:cache.ndim])
+    if cache.ndim == 4:
+        return jax.vmap(lambda c, n, a: jax.lax.dynamic_update_slice(
+            c, n[:, None], (0, a, 0)))(cache, new, at)
+    return jax.vmap(lambda c, n, a: jax.lax.dynamic_update_slice(
+        c, n[:, None], (0, a)))(cache, new, at)
+
+
 def attn_decode(p, x_t, cfg, cache_k, cache_s_k, cache_v, cache_s_v, pos,
                 *, window: int = 0, quantized: bool = True, backend: str = "ref",
                 splits: int = 1, rolling: bool = False):
     """One-token GQA decode against a (possibly int8) cache.
 
     x_t: (B, D_model); cache_k/v: (B, Hkv, S, hd) int8 (or bf16 when not
-    quantized, scales ignored); pos: scalar int32 current position.
+    quantized, scales ignored); pos: scalar int32 current position, or a
+    per-row (B,) int32 vector for slot-pooled continuous batching
+    (``repro.serve``) — each batch row then RoPE-rotates, writes, and
+    masks at its OWN position, so one jitted step serves a ragged pool of
+    in-flight requests with static shapes.
     ``rolling``: the cache is a circular window buffer of size S — writes
     land at ``pos % S`` and every filled slot is in-window by construction
     (two-tier cache for windowed layers; EXPERIMENTS §Perf).
@@ -262,10 +286,12 @@ def attn_decode(p, x_t, cfg, cache_k, cache_s_k, cache_v, cache_s_v, pos,
     b, _ = x_t.shape
     h, hkv, hd = cfg.n_heads, cfg.n_kv, cfg.head_dim
     s_max = cache_k.shape[2]
+    pos = jnp.asarray(pos, jnp.int32)
+    per_row = pos.ndim == 1                       # slot-pooled ragged batch
     q = (x_t @ p["wq"]).reshape(b, 1, h, hd)
     k_t = (x_t @ p["wk"]).reshape(b, 1, hkv, hd)
     v_t = (x_t @ p["wv"]).reshape(b, 1, hkv, hd)
-    pos_arr = jnp.full((b, 1), pos, jnp.int32)
+    pos_arr = jnp.broadcast_to(pos[:, None] if per_row else pos, (b, 1))
     if cfg.mrope_sections is not None:
         pos3 = jnp.broadcast_to(pos_arr[None], (3, b, 1))
         q = apply_rope(q, pos3, cfg.rope_theta, cfg.rope_fraction,
@@ -280,6 +306,7 @@ def attn_decode(p, x_t, cfg, cache_k, cache_s_k, cache_v, cache_s_v, pos,
     v_new = v_t[:, 0]
 
     kv_pos = jnp.arange(s_max)
+    pos_col = pos[:, None] if per_row else pos    # broadcasts vs (·, S)
     lengths = bias = None
     if rolling:
         write_at = pos % s_max
@@ -291,36 +318,28 @@ def attn_decode(p, x_t, cfg, cache_k, cache_s_k, cache_v, cache_s_v, pos,
         if isinstance(window, int) and window <= 0:
             lengths = jnp.broadcast_to(pos + 1, (b,))      # includes current
         else:
-            valid = kv_pos[None, :] <= pos                 # includes current
+            valid = kv_pos[None, :] <= pos_col             # includes current
             if isinstance(window, int):
-                valid &= kv_pos[None, :] > pos - window
+                valid &= kv_pos[None, :] > pos_col - window
             else:
                 valid &= jnp.where(window > 0,
-                                   kv_pos[None, :] > pos - window, True)
+                                   kv_pos[None, :] > pos_col - window, True)
             bias = jnp.where(valid, 0.0, NEG_INF).astype(jnp.float32)
             bias = jnp.broadcast_to(bias, (b, s_max))
 
     if quantized:
         kq_new, ks_new = kvq_ops.quantize_kv(k_new)
         vq_new, vs_new = kvq_ops.quantize_kv(v_new)
-        ck = jax.lax.dynamic_update_slice(cache_k, kq_new[:, :, None],
-                                          (0, 0, write_at, 0))
-        cv = jax.lax.dynamic_update_slice(cache_v, vq_new[:, :, None],
-                                          (0, 0, write_at, 0))
-        csk = jax.lax.dynamic_update_slice(cache_s_k, ks_new[:, :, None],
-                                           (0, 0, write_at))
-        csv = jax.lax.dynamic_update_slice(cache_s_v, vs_new[:, :, None],
-                                           (0, 0, write_at))
+        ck = _write_token(cache_k, kq_new, write_at)
+        cv = _write_token(cache_v, vq_new, write_at)
+        csk = _write_token(cache_s_k, ks_new, write_at)
+        csv = _write_token(cache_s_v, vs_new, write_at)
         out = kvq_ops.decode_attention(q, ck, csk, cv, csv, lengths=lengths,
                                        bias=bias, backend=backend,
                                        splits=splits)
     else:
-        ck = jax.lax.dynamic_update_slice(
-            cache_k, k_new[:, :, None].astype(cache_k.dtype),
-            (0, 0, write_at, 0))
-        cv = jax.lax.dynamic_update_slice(
-            cache_v, v_new[:, :, None].astype(cache_v.dtype),
-            (0, 0, write_at, 0))
+        ck = _write_token(cache_k, k_new.astype(cache_k.dtype), write_at)
+        cv = _write_token(cache_v, v_new.astype(cache_v.dtype), write_at)
         csk, csv = cache_s_k, cache_s_v
         g = h // hkv
         qg = q.reshape(b, hkv, g, hd).astype(jnp.float32)

@@ -623,10 +623,40 @@ def init_cache(cfg: ModelConfig, batch: int, s_max: int, *,
     return cache
 
 
+#: cache leaves with a sequence axis, and which axis it is — the single
+#: source for growing / scattering caches (serve pool, prefill prealloc).
+CACHE_SEQ_AXES = {"k": 3, "v": 3, "k_scale": 3, "v_scale": 3,
+                  "mla_lat": 2, "mla_rope": 2}
+
+
+def grow_cache(cache: dict, s_max: int) -> dict:
+    """Zero-pad every sequence-bearing cache leaf out to ``s_max`` slots.
+
+    Replaces the post-hoc ``tree_map_with_path`` pad the serve driver used
+    to apply OUTSIDE the jit: growing inside the prefill step means the
+    decode cache is preallocated at its final length in one compiled
+    program and no second buffer materializes at the host boundary.
+    SSM/conv state and ``pos`` have no sequence axis and pass through.
+    """
+    out = dict(cache)
+    for name, ax in CACHE_SEQ_AXES.items():
+        if name not in cache:
+            continue
+        x = cache[name]
+        pad = s_max - x.shape[ax]
+        if pad < 0:
+            raise ValueError(f"grow_cache: {name} already has "
+                             f"{x.shape[ax]} > {s_max} slots")
+        if pad:
+            out[name] = jnp.pad(
+                x, [(0, pad) if i == ax else (0, 0) for i in range(x.ndim)])
+    return out
+
+
 def decode_step(params, cfg: ModelConfig, cache: dict, tokens_t, *,
                 policy: Policy = Policy.full(), quantized: bool = True,
                 kvq_backend: str = "ref", kvq_splits: int = 1, enc_out=None,
-                scan_unroll: int = 1, mesh=None):
+                active=None, scan_unroll: int = 1, mesh=None):
     """tokens_t: (B,) int32 current token.  Returns (logits (B,V), cache).
 
     Uniform window schedules pass the window as a STATIC python int (same
@@ -635,9 +665,31 @@ def decode_step(params, cfg: ModelConfig, cache: dict, tokens_t, *,
     dense (B, S) bias; per-layer overrides (``cfg.global_layers``) scan a
     traced window and keep the documented bias fallback (hybrid archs
     serve through ``decode_step_two_tier`` to avoid it entirely).
+
+    Slot-pooled serving (``repro.serve``): when ``cache['pos']`` is a
+    per-row (B,) vector, every row decodes at its OWN position — RoPE,
+    cache write, and length mask are all per-row, so one compiled step
+    serves a ragged pool of in-flight requests.  ``active`` ((B,) bool)
+    then gates the position increment: inactive (free) slots stay frozen
+    instead of drifting, and their lengths clamp to >= 1 so the masked
+    softmax never normalizes over an empty row (their logits are garbage
+    by contract and never read).  Occupancy is pure data — joining or
+    retiring a request never changes a traced shape, hence no recompile.
     """
     params = policy.cast_to_compute(params)
     pos = cache["pos"]
+    per_slot = getattr(pos, "ndim", 0) == 1
+    if per_slot and (cfg.mixer != "attn" or cfg.mla is not None):
+        raise NotImplementedError(
+            "per-slot decode (vector cache['pos']) is only supported for "
+            "GQA attention caches (the kvq layout); MLA/SSM/hybrid archs "
+            "serve through the scalar-pos paths")
+    if active is not None and not per_slot:
+        raise ValueError("decode_step: active mask requires a per-slot "
+                         "(vector) cache['pos']")
+    # per-slot pos is >= 0 by construction (pool zeros / scatter lengths),
+    # so lengths = pos+1 >= 1 and every row's softmax normalizer is
+    # non-empty on every backend — free slots never produce NaNs
     x = params["embed"][tokens_t]                           # (B, D)
     static_window = int(cfg.window) if not cfg.global_layers else None
     windows = None if static_window is not None else layer_windows(cfg)
@@ -692,5 +744,8 @@ def decode_step(params, cfg: ModelConfig, cache: dict, tokens_t, *,
     x = rms_norm(x[:, None], params["final_norm"], cfg.norm_eps, bf16_grad=cfg.norm_bf16_grad)[:, 0]
     head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
     logits = _mask_padded_vocab((x @ head).astype(policy.output_dtype), cfg)
-    new_caches["pos"] = pos + 1
+    if active is not None:
+        new_caches["pos"] = pos + active.astype(jnp.int32)
+    else:
+        new_caches["pos"] = pos + 1
     return logits, new_caches

@@ -9,7 +9,7 @@ from repro.plan.profile import (ChainProfile, attn_resid_bytes,
                                 flash_training_eligible, kv_cache_report,
                                 plan_for_budget, plan_min_peak, plan_report,
                                 profile_resnet, profile_sequential,
-                                profile_transformer)
+                                profile_transformer, serve_capacity_report)
 from repro.plan.solver import (RematPlan, budget_boundaries,
                                min_peak_boundaries, plan_metrics)
 
@@ -18,7 +18,7 @@ __all__ = [
     "profile_sequential", "profile_resnet", "profile_transformer",
     "attn_resid_bytes", "flash_attn_flop_report",
     "flash_bwd_recompute_flops", "flash_training_eligible",
-    "decode_tile_report", "kv_cache_report",
+    "decode_tile_report", "kv_cache_report", "serve_capacity_report",
     "plan_min_peak", "plan_for_budget", "plan_report",
     "min_peak_boundaries", "budget_boundaries", "plan_metrics",
 ]

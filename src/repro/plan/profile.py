@@ -345,6 +345,39 @@ def kv_cache_report(cfg, b: int, s: int) -> dict:
             "ratio": f32 / int8 if int8 else 0.0}
 
 
+def serve_capacity_report(cfg, s_max: int, budget_bytes: int, *,
+                          quantized: bool = True,
+                          params_bytes: int = 0) -> dict:
+    """Max resident request slots a serve-memory budget admits.
+
+    The serving mirror of the training budget solver: the slot pool
+    (``repro.serve``) preallocates its decode cache at ``(max_slots,
+    s_max)``, so capacity is ``(budget - params) // bytes_per_slot``.
+    ``bytes_per_slot`` is EXACT — eval_shape over ``init_cache`` at batch
+    1, counting every leaf the pool actually allocates (int8 K/V + f32
+    scale rows, or the bf16 leaves when not quantized, plus SSM/conv
+    state on hybrid archs).  ``kv_int8_bytes_per_slot`` cross-references
+    :func:`kv_cache_report`'s two-tier accounting for the attention share.
+    """
+    from repro.models import transformer
+    cache_sds = jax.eval_shape(
+        lambda: transformer.init_cache(cfg, 1, s_max, quantized=quantized))
+    bytes_per_slot = sum(x.size * x.dtype.itemsize
+                         for k, x in cache_sds.items() if k != "pos")
+    kv_rep = kv_cache_report(cfg, 1, s_max)
+    usable = max(0, int(budget_bytes) - int(params_bytes))
+    return {
+        "eligible": bytes_per_slot > 0,
+        "bytes_per_slot": int(bytes_per_slot),
+        "kv_int8_bytes_per_slot": int(kv_rep["int8_bytes"]),
+        "budget_bytes": int(budget_bytes),
+        "params_bytes": int(params_bytes),
+        "max_slots": (usable // bytes_per_slot) if bytes_per_slot else 0,
+        "s_max": int(s_max),
+        "quantized": bool(quantized),
+    }
+
+
 def profile_transformer(cfg, batch_sds, *, dtype_bytes: int = 2,
                         flash_resid_bytes: "int | None" = None
                         ) -> ChainProfile:

@@ -1,0 +1,17 @@
+"""Continuous-batching serve engine: slot-pooled int8 KV cache, FCFS
+scheduler, and a recompile-free join/evict step loop.  See README.md in
+this package for the architecture and the static-shape contract."""
+from repro.serve.cache_pool import SlotPool, scatter_request
+from repro.serve.engine import ServeEngine, default_buckets, supports
+from repro.serve.metrics import ServeMetrics
+from repro.serve.sampling import make_sampler, sample_tokens
+from repro.serve.scheduler import (DECODE, DONE, PREFILL, QUEUED, Request,
+                                   Scheduler)
+from repro.serve.trace import TraceRequest, synthetic_trace
+
+__all__ = [
+    "ServeEngine", "SlotPool", "Scheduler", "Request", "ServeMetrics",
+    "TraceRequest", "synthetic_trace", "scatter_request", "sample_tokens",
+    "make_sampler", "default_buckets", "supports",
+    "QUEUED", "PREFILL", "DECODE", "DONE",
+]

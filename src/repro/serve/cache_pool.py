@@ -1,0 +1,116 @@
+"""Slot-indexed two-tier KV pool: explicit array-lifetime management.
+
+The pool preallocates ONE decode cache at ``(max_slots, max_len)`` and
+treats each batch row as an allocatable slot whose lifetime is a request
+lifetime (OLLA's array-lifetime idea applied to serving: the cache rows
+are the arrays, alloc/free is the plan).  Two tiers of state live here:
+
+* device: the cache pytree itself (int8 K/V + f32 scales, per-slot
+  ``pos`` lengths) — shapes NEVER change, so the decode step compiled
+  against it is reused for the whole process lifetime;
+* host: the free-list and alloc/free accounting — pure Python, no
+  device sync on the scheduling path.
+
+``scatter_request`` is the jitted join: it writes a freshly prefilled
+single-request cache (already grown to ``max_len``) into a free slot with
+one ``dynamic_update_slice`` per leaf and stamps the slot's length.
+Retirement is free: the slot's rows simply stop being read (the engine
+drops it from the active mask) and the host free-list gets the slot back.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import transformer
+from repro.models.config import ModelConfig
+
+
+def scatter_request(pool_cache: dict, req_cache: dict, slot, length) -> dict:
+    """Write a prefilled request cache (leading batch dim 1, sequence axis
+    already grown to the pool's ``max_len``) into ``slot``.
+
+    ``slot``/``length`` may be traced scalars — joining a request never
+    triggers a recompile.  Functional: returns a new cache pytree (jit
+    with ``donate_argnums=(0,)`` to update in place).
+    """
+    out = dict(pool_cache)
+    for name, ax in transformer.CACHE_SEQ_AXES.items():
+        if name not in pool_cache:
+            continue
+        upd = req_cache[name]
+        if upd.shape[ax] != pool_cache[name].shape[ax]:
+            raise ValueError(
+                f"scatter_request: {name} has {upd.shape[ax]} sequence "
+                f"slots, pool holds {pool_cache[name].shape[ax]} — grow the "
+                f"prefill cache to max_len first (transformer.grow_cache)")
+        start = [0] * upd.ndim
+        start[1] = slot                       # (L, B, ...) batch axis
+        out[name] = jax.lax.dynamic_update_slice(
+            pool_cache[name], upd.astype(pool_cache[name].dtype),
+            tuple(start))
+    out["pos"] = pool_cache["pos"].at[slot].set(
+        jnp.asarray(length, jnp.int32))
+    return out
+
+
+class SlotPool:
+    """Preallocated slot-pooled decode cache + host-side free-list.
+
+    Every ``alloc`` must be matched by exactly one ``free``; the engine's
+    slot-leak invariant (`allocs == frees` and ``occupancy == 0`` once a
+    trace drains) is asserted in tests.
+    """
+
+    def __init__(self, cfg: ModelConfig, max_slots: int, max_len: int, *,
+                 quantized: bool = True):
+        if max_slots < 1:
+            raise ValueError(f"SlotPool: max_slots must be >= 1, "
+                             f"got {max_slots}")
+        self.cfg = cfg
+        self.max_slots = max_slots
+        self.max_len = max_len
+        self.quantized = quantized
+        self.cache = transformer.init_cache(cfg, max_slots, max_len,
+                                            quantized=quantized)
+        # per-slot lengths replace the lockstep scalar position: occupancy
+        # is data, not shape
+        self.cache["pos"] = jnp.zeros((max_slots,), jnp.int32)
+        self._free = list(range(max_slots - 1, -1, -1))   # pop() -> slot 0 first
+        self._live: set[int] = set()
+        self.allocs = 0
+        self.frees = 0
+
+    # -- host-side lifetime management ------------------------------------
+    @property
+    def free_slots(self) -> int:
+        return len(self._free)
+
+    @property
+    def occupancy(self) -> int:
+        return len(self._live)
+
+    def alloc(self) -> int | None:
+        """Claim a free slot id, or None when the pool is full."""
+        if not self._free:
+            return None
+        slot = self._free.pop()
+        self._live.add(slot)
+        self.allocs += 1
+        return slot
+
+    def free(self, slot: int) -> None:
+        if slot not in self._live:
+            raise ValueError(f"SlotPool.free: slot {slot} is not live "
+                             f"(double free or foreign slot)")
+        self._live.remove(slot)
+        self._free.append(slot)
+        self.frees += 1
+
+    # -- accounting --------------------------------------------------------
+    def bytes_per_slot(self) -> int:
+        """Exact device bytes one resident request pins (cache bytes /
+        max_slots — every leaf's batch axis is the slot axis)."""
+        total = sum(x.size * x.dtype.itemsize
+                    for k, x in self.cache.items() if k != "pos")
+        return total // self.max_slots

@@ -1,0 +1,338 @@
+"""Continuous-batching serve engine over the prefill/decode steps.
+
+One engine step = (bounded) admissions + one decode round:
+
+* admission: FCFS requests claim a pool slot, prefill at a static prompt
+  BUCKET (padded; the bucket's suffix positions never contaminate the
+  prefix under causal attention, so cache rows and the last-valid logit
+  are token-exact vs an unpadded prefill), get scattered into the slot
+  with one fused update, and sample their first token (TTFT);
+* decode: ONE jitted step over the whole pool — every shape is static at
+  ``(max_slots, max_len)``, occupancy lives purely in the per-slot
+  ``pos`` lengths and the active mask, and the split-K decode kernel's
+  length-aware early-outs make the padded tail of every slot cost ~no
+  compute.  Joining and retiring requests therefore NEVER re-jits: after
+  ``warmup()`` the program cache is frozen (asserted in tests via the
+  jit cache counters).
+
+Retirement (EOS or max-new-tokens) frees the slot back to the pool; the
+row's stale bytes are simply never read again and are fully overwritten
+by the next scatter.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.mixed_precision import get_policy
+from repro.models import transformer
+from repro.models.config import ModelConfig
+from repro.serve import sampling
+from repro.serve.cache_pool import SlotPool, scatter_request
+from repro.serve.metrics import ServeMetrics
+from repro.serve.scheduler import DECODE, Request, Scheduler
+from repro.serve.trace import TraceRequest
+
+
+def default_buckets(max_len: int, lo: int = 16) -> tuple[int, ...]:
+    """Power-of-two prompt buckets up to max_len (one compile each)."""
+    out = []
+    b = lo
+    while b < max_len:
+        out.append(b)
+        b *= 2
+    return tuple(out) or (max_len,)
+
+
+def supports(cfg: ModelConfig) -> bool:
+    """Engine eligibility: the slot-pooled per-row decode path needs the
+    GQA kvq cache layout and a uniform window schedule."""
+    return (cfg.mixer == "attn" and cfg.mla is None
+            and cfg.encoder is None and not cfg.global_layers)
+
+
+class ServeEngine:
+    """Slot-pooled continuous-batching engine (see module docstring)."""
+
+    def __init__(self, params, cfg: ModelConfig, *, max_slots: int,
+                 max_len: int, prompt_buckets: Sequence[int] | None = None,
+                 policy_name: str = "bf16", quantized: bool = True,
+                 kv_backend: str = "ref", kv_splits: int = 1,
+                 temperature: float = 0.0, top_k: int = 0, seed: int = 0,
+                 eos_id: Optional[int] = None,
+                 max_prefill_per_step: int = 1,
+                 mem_budget_bytes: Optional[int] = None):
+        if not supports(cfg):
+            raise NotImplementedError(
+                "ServeEngine needs a GQA attention arch with a uniform "
+                "window schedule (no MLA latents, SSM state, encoder "
+                "cross-attention, or per-layer global overrides) — those "
+                "serve through the lockstep driver")
+        self.cfg = cfg
+        self.params = params
+        self.max_len = max_len
+        self.quantized = quantized
+        self.eos_id = eos_id
+        self.temperature, self.top_k = float(temperature), int(top_k)
+        self.capacity_report = None
+        if mem_budget_bytes is not None:
+            from repro import plan as plan_mod
+            self.capacity_report = plan_mod.serve_capacity_report(
+                cfg, max_len, mem_budget_bytes, quantized=quantized)
+            cap = self.capacity_report["max_slots"]
+            if cap < 1:
+                raise ValueError(
+                    f"ServeEngine: memory budget {mem_budget_bytes} admits "
+                    f"0 slots at max_len={max_len} "
+                    f"({self.capacity_report['bytes_per_slot']} B/slot)")
+            max_slots = min(max_slots, cap)
+        self.pool = SlotPool(cfg, max_slots, max_len, quantized=quantized)
+        self.scheduler = Scheduler(
+            max_slots, bytes_per_slot=self.pool.bytes_per_slot(),
+            byte_budget=mem_budget_bytes,
+            max_prefill_per_step=max_prefill_per_step)
+        self.metrics = ServeMetrics()
+        self.buckets = tuple(sorted(prompt_buckets
+                                    if prompt_buckets is not None
+                                    else default_buckets(max_len)))
+        if self.buckets[-1] > max_len:
+            raise ValueError(f"prompt bucket {self.buckets[-1]} exceeds "
+                             f"max_len {max_len}")
+
+        policy = get_policy(policy_name)
+
+        def _decode(params, cache, tokens, active, key):
+            # sampling is FUSED into the decode program: one dispatch per
+            # engine step, and the token/active buffers never round-trip
+            # through the host on the steady-state path
+            logits, cache = transformer.decode_step(
+                params, cfg, cache, tokens, policy=policy,
+                quantized=quantized, kvq_backend=kv_backend,
+                kvq_splits=kv_splits, active=active)
+            sampled = sampling.sample_tokens(
+                logits, key, temperature=self.temperature, top_k=self.top_k)
+            return jnp.where(active, sampled, tokens), cache
+
+        def _prefill(bucket, params, tokens, true_len):
+            logits, aux = transformer.forward(
+                params, cfg, {"tokens": tokens}, policy=policy,
+                build_cache=True, cache_quantized=quantized)
+            # last VALID position, not bucket-1: padded suffix logits are
+            # garbage by contract
+            last = jax.lax.dynamic_index_in_dim(logits, true_len - 1, axis=1,
+                                                keepdims=False)
+            cache = transformer.grow_cache(aux["cache"], self.max_len)
+            return last, cache
+
+        def _join(tokens, active, slot, tok):
+            return tokens.at[slot].set(tok), active.at[slot].set(True)
+
+        def _leave(active, slot):
+            return active.at[slot].set(False)
+
+        # donate cache + tokens (both returned); active is reused across
+        # steps and must NOT be donated
+        self._decode_fn = jax.jit(_decode, donate_argnums=(1, 2))
+        self._scatter_fn = jax.jit(scatter_request, donate_argnums=(0,))
+        self._join_fn = jax.jit(_join, donate_argnums=(0, 1))
+        self._leave_fn = jax.jit(_leave, donate_argnums=(0,))
+        self._prefill_fns = {
+            b: jax.jit(functools.partial(_prefill, b)) for b in self.buckets}
+        self._sampler = sampling.make_sampler(temperature=self.temperature,
+                                              top_k=self.top_k)
+
+        self._key = jax.random.PRNGKey(seed)
+        self._draws = 0
+        self._step_no = 0
+        self._next_rid = 0
+        self._slot_req: dict[int, Request] = {}
+        self._requests_done: list[Request] = []
+        self._tokens_dev = jnp.zeros((max_slots,), jnp.int32)
+        self._active_dev = jnp.zeros((max_slots,), bool)
+        self._active_buf = np.zeros((max_slots,), bool)    # host mirror
+
+    # -- public API --------------------------------------------------------
+    @property
+    def step_no(self) -> int:
+        return self._step_no
+
+    def submit(self, prompt, max_new_tokens: int,
+               eos_id: Optional[int] = None,
+               arrival_step: Optional[int] = None) -> int:
+        """Queue a request; returns its rid.  FCFS from here on."""
+        prompt = np.asarray(prompt, np.int32)
+        req = Request(rid=self._next_rid, prompt=prompt,
+                      max_new_tokens=max_new_tokens,
+                      arrival_step=(self._step_no if arrival_step is None
+                                    else arrival_step),
+                      eos_id=eos_id if eos_id is not None else self.eos_id)
+        if req.prompt_len > self.buckets[-1]:
+            raise ValueError(f"request {req.rid}: prompt_len "
+                             f"{req.prompt_len} exceeds largest bucket "
+                             f"{self.buckets[-1]}")
+        if req.total_len() > self.max_len:
+            raise ValueError(f"request {req.rid}: prompt+gen "
+                             f"{req.total_len()} exceeds max_len "
+                             f"{self.max_len}")
+        self._next_rid += 1
+        self.scheduler.submit(req)
+        self.metrics.on_submit(req.rid, self._step_no)
+        return req.rid
+
+    def compile_counts(self) -> dict:
+        """jit program-cache sizes — the zero-recompile contract's meter."""
+        counts = {"decode": self._decode_fn._cache_size(),
+                  "scatter": self._scatter_fn._cache_size(),
+                  "join": self._join_fn._cache_size(),
+                  "leave": self._leave_fn._cache_size(),
+                  "sampler": self._sampler._cache_size()}
+        for b, fn in self._prefill_fns.items():
+            counts[f"prefill_{b}"] = fn._cache_size()
+        return counts
+
+    def warmup(self) -> dict:
+        """Compile every program the engine can ever need, then reset all
+        request state.  After this, joins/retirements are recompile-free
+        (``compile_counts`` is frozen; tests assert it)."""
+        for b, fn in self._prefill_fns.items():
+            # compile each prompt-bucket program directly: the admission
+            # path can't exercise a bucket b == max_len (prompt b plus one
+            # generated token would exceed max_len), and a shorter probe
+            # prompt could fall into an adjacent bucket instead
+            jax.block_until_ready(
+                fn(self.params, jnp.zeros((1, b), jnp.int32), jnp.int32(b)))
+        if self.max_len >= 3:
+            # one real request drives admission + one decode round, which
+            # compiles decode/scatter/join/leave/sampler; eos_id=-1 (no
+            # vocab token is negative) so an engine-level eos_id can't
+            # retire the zeros probe at admission before decode compiles
+            plen = min(self.buckets[0], self.max_len - 2)
+            self.submit(np.zeros((plen,), np.int32), 2, eos_id=-1)
+            guard = 8 * (self.max_len + len(self.buckets))
+            for _ in range(guard):
+                if not self.scheduler.has_work():
+                    break
+                self.step()
+        assert not self.scheduler.has_work(), "warmup trace did not drain"
+        self.reset()
+        return self.compile_counts()
+
+    def reset(self) -> None:
+        """Drop all request state; keep the compiled programs."""
+        assert self.scheduler.resident == 0 and not self.scheduler.has_work(), \
+            "reset with in-flight requests"
+        self.pool = SlotPool(self.cfg, self.pool.max_slots, self.max_len,
+                             quantized=self.quantized)
+        self.scheduler = Scheduler(
+            self.pool.max_slots, bytes_per_slot=self.pool.bytes_per_slot(),
+            byte_budget=self.scheduler.byte_budget,
+            max_prefill_per_step=self.scheduler.max_prefill_per_step)
+        self.metrics = ServeMetrics()
+        self._draws = 0
+        self._step_no = 0
+        self._next_rid = 0
+        self._slot_req.clear()
+        self._requests_done.clear()
+        self._tokens_dev = jnp.zeros((self.pool.max_slots,), jnp.int32)
+        self._active_dev = jnp.zeros((self.pool.max_slots,), bool)
+        self._active_buf[:] = False
+
+    # -- engine internals --------------------------------------------------
+    def _bucket_for(self, n: int) -> int:
+        for b in self.buckets:
+            if n <= b:
+                return b
+        raise ValueError(f"prompt_len {n} exceeds largest bucket")
+
+    def _next_key(self):
+        if self.temperature <= 0.0:
+            return self._key              # greedy never consumes the key
+        k = jax.random.fold_in(self._key, self._draws)
+        self._draws += 1
+        return k
+
+    def _emit(self, req: Request, tok: int) -> None:
+        """Record one sampled token; retire the request when finished."""
+        req.tokens.append(tok)
+        self.metrics.on_token(req.rid, self._step_no)
+        hit_eos = req.eos_id is not None and tok == req.eos_id
+        if hit_eos or len(req.tokens) >= req.max_new_tokens:
+            self.scheduler.retire(req)
+            self.metrics.on_done(req.rid)
+            self.pool.free(req.slot)
+            self._active_buf[req.slot] = False
+            self._active_dev = self._leave_fn(self._active_dev,
+                                              jnp.int32(req.slot))
+            del self._slot_req[req.slot]
+            self._requests_done.append(req)
+
+    def step(self) -> None:
+        """Admissions (bounded prefills) + one decode round."""
+        admitted = self.scheduler.pop_admissible(self.pool.free_slots,
+                                                 self._step_no)
+        for req in admitted:
+            slot = self.pool.alloc()
+            assert slot is not None       # pop_admissible checked free_slots
+            b = self._bucket_for(req.prompt_len)
+            padded = np.zeros((1, b), np.int32)
+            padded[0, :req.prompt_len] = req.prompt
+            logits, req_cache = self._prefill_fns[b](
+                self.params, jnp.asarray(padded), jnp.int32(req.prompt_len))
+            self.pool.cache = self._scatter_fn(
+                self.pool.cache, req_cache, jnp.int32(slot),
+                jnp.int32(req.prompt_len))
+            tok = int(np.asarray(self._sampler(logits, self._next_key()))[0])
+            req.state = DECODE
+            req.slot = slot
+            self._slot_req[slot] = req
+            self._tokens_dev, self._active_dev = self._join_fn(
+                self._tokens_dev, self._active_dev, jnp.int32(slot),
+                jnp.int32(tok))
+            self._active_buf[slot] = True
+            self._emit(req, tok)          # first token: the TTFT sample
+
+        if self._active_buf.any():
+            live = np.nonzero(self._active_buf)[0]      # snapshot pre-emit
+            self._tokens_dev, self.pool.cache = self._decode_fn(
+                self.params, self.pool.cache, self._tokens_dev,
+                self._active_dev, self._next_key())
+            toks = np.asarray(self._tokens_dev)
+            for slot in live:
+                self._emit(self._slot_req[int(slot)], int(toks[slot]))
+
+        self.metrics.on_step(self._step_no, self.scheduler.queue_depth,
+                             self.pool.occupancy)
+        self._step_no += 1
+
+    def run(self, trace: Sequence[TraceRequest], *,
+            max_steps: Optional[int] = None) -> dict:
+        """Drive a trace to completion; returns the metrics summary.
+
+        Arrivals are step-indexed: a request is submitted once the engine
+        reaches its ``arrival_step``; idle gaps (empty pool, nothing
+        arrived) fast-forward instead of burning decode rounds.
+        """
+        pending = sorted(trace, key=lambda r: r.arrival_step)
+        i = 0
+        budget = max_steps if max_steps is not None else (
+            sum(r.max_new_tokens + 2 for r in pending)
+            + (pending[-1].arrival_step if pending else 0) + 16)
+        while i < len(pending) or self.scheduler.has_work():
+            while (i < len(pending)
+                   and pending[i].arrival_step <= self._step_no):
+                r = pending[i]
+                self.submit(r.prompt, r.max_new_tokens)
+                i += 1
+            if not self.scheduler.has_work() and i < len(pending):
+                self._step_no = pending[i].arrival_step   # fast-forward idle
+                continue
+            self.step()
+            budget -= 1
+            if budget < 0:
+                raise RuntimeError("ServeEngine.run exceeded its step "
+                                   "budget — scheduler stuck?")
+        return self.metrics.summary(max_slots=self.pool.max_slots)

@@ -1,0 +1,113 @@
+"""Serving observability: TTFT, inter-token latency, throughput, queue
+depth, and slot occupancy.
+
+Latencies are wall-clock (``time.perf_counter``); scheduling quantities
+(queue depth, occupancy) are sampled once per engine step, so their means
+are per-step averages.  TTFT for a request counts from the moment the
+engine first SEES it (submit) to its first sampled token — queueing delay
+included, which is the honest serving number.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Optional
+
+
+@dataclasses.dataclass
+class _ReqStats:
+    t_submit: float
+    submit_step: int
+    t_first: Optional[float] = None
+    first_step: Optional[int] = None
+    t_last: Optional[float] = None
+    t_done: Optional[float] = None
+    n_tokens: int = 0
+    itl_sum: float = 0.0
+    itl_n: int = 0
+
+
+def _mean(xs):
+    xs = list(xs)
+    return sum(xs) / len(xs) if xs else 0.0
+
+
+def _percentile(xs, q):
+    xs = sorted(xs)
+    if not xs:
+        return 0.0
+    i = min(len(xs) - 1, max(0, int(round(q * (len(xs) - 1)))))
+    return xs[i]
+
+
+class ServeMetrics:
+    """Per-request latency accounting + per-step gauges."""
+
+    def __init__(self, clock=time.perf_counter):
+        self._clock = clock
+        self._reqs: dict[int, _ReqStats] = {}
+        self._gauges: list[tuple[int, int, int]] = []  # (step, queue, occ)
+        self._t0: Optional[float] = None
+        self._t_end: Optional[float] = None
+
+    def now(self) -> float:
+        return self._clock()
+
+    # -- request lifecycle -------------------------------------------------
+    def on_submit(self, rid: int, step: int) -> None:
+        t = self.now()
+        if self._t0 is None:
+            self._t0 = t
+        self._reqs[rid] = _ReqStats(t_submit=t, submit_step=step)
+
+    def on_token(self, rid: int, step: int) -> None:
+        r = self._reqs[rid]
+        t = self.now()
+        if r.t_first is None:
+            r.t_first, r.first_step = t, step
+        elif r.t_last is not None:
+            r.itl_sum += t - r.t_last
+            r.itl_n += 1
+        r.t_last = t
+        r.n_tokens += 1
+        self._t_end = t
+
+    def on_done(self, rid: int) -> None:
+        self._reqs[rid].t_done = self.now()
+
+    # -- per-step gauges ---------------------------------------------------
+    def on_step(self, step: int, queue_depth: int, occupancy: int) -> None:
+        self._gauges.append((step, queue_depth, occupancy))
+
+    # -- aggregation -------------------------------------------------------
+    def summary(self, *, max_slots: int = 0) -> dict:
+        done = [r for r in self._reqs.values() if r.t_done is not None]
+        ttfts = [r.t_first - r.t_submit for r in done if r.t_first is not None]
+        ttft_steps = [r.first_step - r.submit_step for r in done
+                      if r.first_step is not None]
+        itls = [r.itl_sum / r.itl_n for r in done if r.itl_n]
+        total_tokens = sum(r.n_tokens for r in self._reqs.values())
+        wall = ((self._t_end - self._t0)
+                if self._t0 is not None and self._t_end is not None else 0.0)
+        occ = [o for (_, _, o) in self._gauges]
+        out = {
+            "n_requests": len(self._reqs),
+            "n_done": len(done),
+            "total_tokens": total_tokens,
+            "wall_s": wall,
+            "tokens_per_s": total_tokens / wall if wall > 0 else 0.0,
+            "ttft_mean_s": _mean(ttfts),
+            "ttft_p50_s": _percentile(ttfts, 0.5),
+            "ttft_p95_s": _percentile(ttfts, 0.95),
+            "ttft_mean_steps": _mean(ttft_steps),
+            "itl_mean_s": _mean(itls),
+            "queue_depth_mean": _mean(q for (_, q, _) in self._gauges),
+            "queue_depth_max": max((q for (_, q, _) in self._gauges),
+                                   default=0),
+            "occupancy_mean": _mean(occ),
+            "occupancy_max": max(occ, default=0),
+            "n_steps": len(self._gauges),
+        }
+        if max_slots:
+            out["occupancy_frac"] = out["occupancy_mean"] / max_slots
+        return out

@@ -1,0 +1,37 @@
+"""Seeded token sampling shared by the engine and the lockstep driver.
+
+Greedy (``temperature <= 0``) stays the default everywhere; temperature
+and top-k are STATIC Python values closed over at jit time, so changing
+them builds a new program but stepping never does.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def sample_tokens(logits, key=None, *, temperature: float = 0.0,
+                  top_k: int = 0):
+    """logits: (B, V) -> (B,) int32 sampled token per row.
+
+    ``temperature <= 0`` is exact greedy (argmax; ``key`` unused).
+    Otherwise softmax sampling at ``temperature``, optionally restricted
+    to the ``top_k`` highest-logit tokens per row (0 = full vocab).
+    Deterministic for a fixed key: drive with
+    ``jax.random.fold_in(base_key, step)``.
+    """
+    if temperature <= 0.0:
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    if key is None:
+        raise ValueError("sample_tokens: temperature > 0 needs a PRNG key")
+    scaled = logits.astype(jnp.float32) / float(temperature)
+    if top_k > 0 and top_k < logits.shape[-1]:
+        kth = jax.lax.top_k(scaled, top_k)[0][..., -1:]   # per-row threshold
+        scaled = jnp.where(scaled < kth, -jnp.inf, scaled)
+    return jax.random.categorical(key, scaled, axis=-1).astype(jnp.int32)
+
+
+def make_sampler(*, temperature: float = 0.0, top_k: int = 0):
+    """A jitted (logits, key) -> tokens closure with static knobs."""
+    return jax.jit(lambda logits, key: sample_tokens(
+        logits, key, temperature=temperature, top_k=top_k))

@@ -1,0 +1,123 @@
+"""Request lifecycle + FCFS admission under a slot/byte budget.
+
+States move strictly ``QUEUED -> PREFILL -> DECODE -> DONE``.  Admission
+is first-come-first-served: a queued request joins only when (a) a pool
+slot is free, (b) the byte budget admits one more resident slot, and
+(c) the per-step prefill quota has room — the quota is the
+prefill-vs-decode interleave knob: prefills are the expensive joins, so
+capping them per engine step bounds the inter-token latency the resident
+decodes pay while new requests stream in.
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from typing import Optional
+
+import numpy as np
+
+QUEUED, PREFILL, DECODE, DONE = "QUEUED", "PREFILL", "DECODE", "DONE"
+
+
+@dataclasses.dataclass
+class Request:
+    """One generation request moving through the engine."""
+    rid: int
+    prompt: np.ndarray                    # (prompt_len,) int32
+    max_new_tokens: int
+    arrival_step: int = 0                 # engine step at which it exists
+    eos_id: Optional[int] = None          # per-request EOS override
+    # -- engine-owned state -----------------------------------------------
+    state: str = QUEUED
+    slot: Optional[int] = None
+    tokens: list[int] = dataclasses.field(default_factory=list)
+
+    def __post_init__(self):
+        self.prompt = np.asarray(self.prompt, np.int32)
+        if self.prompt.ndim != 1 or self.prompt.size == 0:
+            raise ValueError(f"Request {self.rid}: prompt must be a "
+                             f"non-empty 1-D token array")
+        if self.max_new_tokens < 1:
+            raise ValueError(f"Request {self.rid}: max_new_tokens must be "
+                             f">= 1, got {self.max_new_tokens}")
+
+    @property
+    def prompt_len(self) -> int:
+        return int(self.prompt.shape[0])
+
+    def total_len(self) -> int:
+        """Worst-case resident length (prompt + full generation)."""
+        return self.prompt_len + self.max_new_tokens
+
+
+class Scheduler:
+    """FCFS queue with slot/byte-budget admission.
+
+    ``byte_budget``/``bytes_per_slot`` bound resident slots by memory (the
+    planner's ``serve_capacity_report`` derives the same number ahead of
+    time); ``max_prefill_per_step`` is the interleave quota.
+    """
+
+    def __init__(self, max_slots: int, *, bytes_per_slot: int = 0,
+                 byte_budget: Optional[int] = None,
+                 max_prefill_per_step: int = 1):
+        if max_prefill_per_step < 1:
+            raise ValueError("Scheduler: max_prefill_per_step must be >= 1")
+        self.max_slots = max_slots
+        self.bytes_per_slot = bytes_per_slot
+        self.byte_budget = byte_budget
+        self.max_prefill_per_step = max_prefill_per_step
+        self._queue: deque[Request] = deque()
+        self._resident = 0
+        self.admitted = 0
+
+    # ----------------------------------------------------------------------
+    def submit(self, req: Request) -> None:
+        if req.state != QUEUED:
+            raise ValueError(f"Scheduler.submit: request {req.rid} is "
+                             f"{req.state}, expected {QUEUED}")
+        self._queue.append(req)
+
+    @property
+    def queue_depth(self) -> int:
+        return len(self._queue)
+
+    @property
+    def resident(self) -> int:
+        return self._resident
+
+    def has_work(self) -> bool:
+        return bool(self._queue) or self._resident > 0
+
+    def _budget_admits(self) -> bool:
+        if self.byte_budget is None or self.bytes_per_slot <= 0:
+            return True
+        return (self._resident + 1) * self.bytes_per_slot <= self.byte_budget
+
+    def pop_admissible(self, free_slots: int, now_step: int) -> list[Request]:
+        """FCFS head-of-line admission for this engine step.
+
+        Strict FCFS: if the head request can't join (no slot, budget, not
+        yet arrived), nothing behind it jumps the line — latency stays
+        predictable and starvation-free.
+        """
+        out: list[Request] = []
+        while (self._queue and free_slots > 0
+               and len(out) < self.max_prefill_per_step
+               and self._queue[0].arrival_step <= now_step
+               and self._budget_admits()):
+            req = self._queue.popleft()
+            req.state = PREFILL
+            self._resident += 1
+            self.admitted += 1
+            free_slots -= 1
+            out.append(req)
+        return out
+
+    def retire(self, req: Request) -> None:
+        if req.state not in (PREFILL, DECODE):
+            raise ValueError(f"Scheduler.retire: request {req.rid} is "
+                             f"{req.state}")
+        req.state = DONE
+        self._resident -= 1
+        assert self._resident >= 0, "scheduler resident count underflow"

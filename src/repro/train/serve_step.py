@@ -20,15 +20,23 @@ from repro.models.config import ModelConfig
 
 def build_prefill_step(cfg: ModelConfig, *, policy_name: str = "bf16",
                        quantized: bool = True, scan_unroll: int = 1,
-                       mesh=None):
+                       s_max: int | None = None, mesh=None):
+    """``s_max``: preallocate the decode cache at its FINAL length (prompt
+    + generation) inside the compiled prefill — the sequence-bearing
+    leaves are grown with ``transformer.grow_cache`` before they ever
+    reach the host, so no second buffer (and no post-hoc tree_map pad)
+    materializes at the jit boundary."""
     policy = get_policy(policy_name)
 
     def prefill_step(params, batch):
         logits, aux = transformer.forward(
             params, cfg, batch, policy=policy, build_cache=True,
             cache_quantized=quantized, scan_unroll=scan_unroll, mesh=mesh)
+        cache = aux["cache"]
+        if s_max is not None:
+            cache = transformer.grow_cache(cache, s_max)
         # serving returns only the last-position logits + the primed cache
-        return logits[:, -1], aux["cache"]
+        return logits[:, -1], cache
 
     return prefill_step
 
