@@ -1,0 +1,177 @@
+"""Mesh-sharding benchmark (ISSUE 6 acceptance): single-device parity of
+the sharded hot paths plus per-device capacity scaling, on 8 emulated host
+devices.  Writes BENCH_shard.json.
+
+Standalone on purpose: the device count is frozen the moment jax
+initializes its backend, so the 8-device grid must be requested via
+XLA_FLAGS *before* ``import jax`` — ``benchmarks/run.py`` invokes this
+file as a subprocess for exactly that reason.
+
+  * train: flash train grads on a (4, 2) data x model mesh vs (1, 1) —
+    the shard_map'd flash custom_vjp under remat + scan + grad must match
+    to <= 1e-3 (losses to 1e-4);
+  * serve: the continuous-batching engine on a (1, 8) mesh (kv-heads
+    sharded over "model") vs the unsharded engine on the same trace —
+    token streams must be EXACT, tokens/s recorded for both;
+  * capacity: ``plan.serve_capacity_report`` under a per-chip budget —
+    per-device slot capacity x devices must admit at least the
+    single-device capacity (sharding the cache never loses slots).
+"""
+from __future__ import annotations
+
+import os
+
+_FLAG = "--xla_force_host_platform_device_count=8"
+if _FLAG not in os.environ.get("XLA_FLAGS", ""):
+    os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                               + " " + _FLAG).strip()
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+import dataclasses
+import json
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro import configs, plan as plan_mod
+from repro.core.mixed_precision import get_policy
+from repro.distributed import sharding as shd
+from repro.launch.mesh import describe, make_mesh
+from repro.models import transformer
+from repro.serve import ServeEngine
+from repro.serve.trace import TraceRequest
+from repro.train import train_step as ts
+
+
+def bench_train() -> dict:
+    cfg = dataclasses.replace(configs.smoke_config("llama3-8b"),
+                              attn_backend="interpret")
+    b, s = 8, 64
+    rng = np.random.default_rng(0)
+    batch = {"tokens": jnp.asarray(rng.integers(0, cfg.vocab, (b, s)),
+                                   jnp.int32),
+             "labels": jnp.asarray(rng.integers(0, cfg.vocab, (b, s)),
+                                   jnp.int32)}
+    params = transformer.init_params(cfg, jax.random.PRNGKey(0))
+    tc = ts.TrainConfig(policy="full")
+    pol = get_policy("full")
+
+    def grads_for(mesh):
+        def loss(p, mb):
+            return transformer.loss_fn(p, cfg, mb, policy=pol,
+                                       remat=tc.remat, mesh=mesh)[0]
+        p_shard = shd.to_shardings(mesh,
+                                   shd.param_specs(cfg, params, mesh=mesh))
+        b_shard = shd.to_shardings(mesh, shd.batch_specs(cfg, batch, mesh))
+        pp = jax.device_put(params, p_shard)
+        bb = jax.device_put(batch, b_shard)
+        fn = jax.jit(jax.value_and_grad(loss),
+                     in_shardings=(p_shard, b_shard))
+        l, g = jax.block_until_ready(fn(pp, bb))
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(pp, bb))
+        return float(l), jax.device_get(g), time.perf_counter() - t0
+
+    mesh1 = make_mesh((1, 1), ("data", "model"))
+    mesh8 = make_mesh((4, 2), ("data", "model"))
+    l1, g1, t1 = grads_for(mesh1)
+    l8, g8, t8 = grads_for(mesh8)
+    diffs = jax.tree_util.tree_map(
+        lambda a, b_: float(np.abs(a - b_).max()), g1, g8)
+    max_diff = max(jax.tree_util.tree_leaves(diffs))
+    loss_diff = abs(l1 - l8)
+    parity = loss_diff < 1e-4 and max_diff < 1e-3
+    print(f"train: mesh {describe(mesh8)} loss_diff={loss_diff:.2e} "
+          f"max_grad_diff={max_diff:.2e} parity={parity}", flush=True)
+    return {"mesh": describe(mesh8), "batch": b, "seq": s,
+            "loss_diff": loss_diff, "max_grad_diff": max_diff,
+            "step_s_single": round(t1, 3), "step_s_mesh": round(t8, 3),
+            "parity": parity}
+
+
+def bench_serve() -> dict:
+    # n_kv=8 divides model=8: the natural kv-heads shard
+    cfg = dataclasses.replace(configs.smoke_config("llama3-8b"),
+                              n_heads=8, n_kv=8, window=0)
+    mesh = make_mesh((1, 8), ("data", "model"))
+    rng = np.random.default_rng(0)
+    lens = [(5, 0), (9, 0), (13, 2), (3, 4), (7, 5), (11, 6), (6, 8),
+            (14, 9)]
+    trace = [TraceRequest(prompt=list(rng.integers(1, 200, (pl,))),
+                          max_new_tokens=8, arrival_step=st)
+             for pl, st in lens]
+    useful = sum(r.max_new_tokens for r in trace)
+    params = transformer.init_params(cfg, jax.random.PRNGKey(0))
+
+    def run(m):
+        eng = ServeEngine(params, cfg, max_slots=4, max_len=64,
+                          prompt_buckets=(8, 16), policy_name="full",
+                          mesh=m)
+        compiles = eng.warmup()
+        t0 = time.perf_counter()
+        eng.run(list(trace))
+        wall = time.perf_counter() - t0
+        assert eng.compile_counts() == compiles, "re-jit mid-trace"
+        return {r.rid: list(r.tokens) for r in eng._requests_done}, wall
+
+    t_single, w_single = run(None)
+    t_mesh, w_mesh = run(mesh)
+    parity = t_single == t_mesh
+    kv_mode = shd.serve_kv_shard(mesh, cfg.n_kv, 64)
+    print(f"serve: mesh {describe(mesh)} kv_shard={kv_mode} "
+          f"token_parity={parity} tok/s single={useful/w_single:.0f} "
+          f"mesh={useful/w_mesh:.0f}", flush=True)
+    return {"mesh": describe(mesh), "kv_shard": kv_mode,
+            "requests": len(trace), "useful_tokens": useful,
+            "token_parity": parity,
+            "tokens_per_s_single": round(useful / w_single, 1),
+            "tokens_per_s_mesh": round(useful / w_mesh, 1)}
+
+
+def bench_capacity() -> dict:
+    cfg = configs.get_config("llama3-8b")
+    mesh = make_mesh((1, 8), ("data", "model"))
+    budget = 8 * 2 ** 30                       # 8 GiB per chip
+    r1 = plan_mod.serve_capacity_report(cfg, 4096, budget)
+    r8 = plan_mod.serve_capacity_report(cfg, 4096, budget, mesh=mesh)
+    scales = r8["max_slots"] * 1 >= r1["max_slots"] and \
+        r8["bytes_per_slot_per_device"] * r8["model_shards"] >= \
+        r8["bytes_per_slot"]
+    print(f"capacity: {r1['max_slots']} slots/chip unsharded -> "
+          f"{r8['max_slots']} slots at "
+          f"{r8['bytes_per_slot_per_device']/2**20:.1f} MiB/slot/device "
+          f"({r8['kv_shard']} over {r8['model_shards']} shards)",
+          flush=True)
+    return {"s_max": 4096, "budget_gib_per_device": 8,
+            "kv_shard": r8["kv_shard"], "devices": r8["devices"],
+            "model_shards": r8["model_shards"],
+            "bytes_per_slot": r1["bytes_per_slot"],
+            "bytes_per_slot_per_device": r8["bytes_per_slot_per_device"],
+            "max_slots_single": r1["max_slots"],
+            "max_slots_per_device_budget": r8["max_slots"],
+            "slots_times_devices_ge_single": scales}
+
+
+def main() -> int:
+    assert len(jax.devices()) >= 8, \
+        f"need 8 emulated devices, got {len(jax.devices())}"
+    out = {"devices": len(jax.devices()),
+           "train": bench_train(),
+           "serve": bench_serve(),
+           "capacity": bench_capacity()}
+    path = os.path.join(os.path.dirname(__file__), "..", "BENCH_shard.json")
+    with open(path, "w") as f:
+        json.dump(out, f, indent=1, sort_keys=True)
+    print(f"# wrote {os.path.normpath(path)}", flush=True)
+    ok = out["train"]["parity"] and out["serve"]["token_parity"] and \
+        out["capacity"]["slots_times_devices_ge_single"]
+    return 0 if ok else 1
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -28,6 +28,11 @@
                   ragged request trace: useful tokens/s, TTFT (steps),
                   slot occupancy and wasted slot-steps (writes
                   BENCH_serve.json).
+  mesh_shard      sharded hot paths on 8 emulated devices: flash train
+                  grads and engine token streams vs single device, plus
+                  per-device slot capacity (subprocess — the device grid
+                  must be set before jax initializes; writes
+                  BENCH_shard.json).
 
 Prints ``name,us_per_call,derived`` CSV rows (plus derived metrics).
 """
@@ -732,9 +737,31 @@ def tbl_compression():
           f"payload_ratio={raw/compression.payload_bytes(payload):.1f}x")
 
 
+def mesh_shard():
+    """Mesh-sharding parity + capacity (ISSUE 6 acceptance), via
+    subprocess: this process already initialized jax with however many
+    devices exist, and the 8-device emulated grid can only be requested
+    through XLA_FLAGS before backend init — so bench_shard.py runs in a
+    fresh interpreter and this wrapper just relays its result."""
+    import os
+    import subprocess
+    import sys as _sys
+
+    script = os.path.join(os.path.dirname(__file__), "bench_shard.py")
+    t0 = time.perf_counter()
+    proc = subprocess.run([_sys.executable, script], text=True,
+                          capture_output=True)
+    _sys.stdout.write(proc.stdout)
+    if proc.returncode:
+        _sys.stderr.write(proc.stderr)
+        raise SystemExit(f"bench_shard failed ({proc.returncode})")
+    _rows("mesh_shard_total", (time.perf_counter() - t0) * 1e6,
+          "devices=8,see=BENCH_shard.json")
+
+
 BENCHES = [tbl_codec, tbl_pipeline, tbl_compression, fig8_memory,
            fig10_pipelines, plan_vs_uniform, flash_fwd_bwd, flash_decode,
-           serve_trace, fig9_time_acc]
+           serve_trace, mesh_shard, fig9_time_acc]
 
 
 def main() -> None:

@@ -52,9 +52,32 @@ def _path_names(path) -> list[str]:
     return names
 
 
-def param_specs(cfg: ModelConfig | None, params_shape) -> Any:
-    """PartitionSpec tree matching ``params_shape`` (shapes or arrays)."""
+def param_specs(cfg: ModelConfig | None, params_shape,
+                mesh: Mesh | None = None) -> Any:
+    """PartitionSpec tree matching ``params_shape`` (shapes or arrays).
+
+    With ``mesh``, specs are validated against the actual model-axis width:
+    any dim the rule would put on "model" but whose size doesn't divide
+    ``mesh.shape["model"]`` falls back to replicated for that leaf — so the
+    same rule table serves production 16-wide TP and a 2-wide CPU-CI mesh
+    without per-arch special cases.  Without ``mesh`` the raw (production)
+    rules are returned unchanged.
+    """
     ep = cfg is not None and cfg.moe is not None and cfg.moe.expert_mode == "ep"
+    n_model = None
+    if mesh is not None:
+        n_model = mesh.shape["model"] if "model" in mesh.axis_names else 1
+
+    def fit(spec: P, shape) -> P:
+        if n_model is None:
+            return spec
+        out = []
+        for ax, name in enumerate(spec):
+            if name == "model" and (n_model == 1 or shape[ax] % n_model):
+                out.append(None)
+            else:
+                out.append(name)
+        return P(*out)
 
     def spec_for(path, leaf):
         names = _path_names(path)
@@ -64,14 +87,99 @@ def param_specs(cfg: ModelConfig | None, params_shape) -> Any:
         if in_ssm:
             return P()
         if ep and name in ("w_gate", "w_up", "w_down") and nd == 4:
-            return P(None, "model", None, None)      # experts over model
+            return fit(P(None, "model", None, None), leaf.shape)
         if name in _LAST and nd >= 1:
-            return P(*([None] * (nd - 1) + ["model"]))
+            return fit(P(*([None] * (nd - 1) + ["model"])), leaf.shape)
         if name in _PENULT and nd >= 2:
-            return P(*([None] * (nd - 2) + ["model", None]))
+            return fit(P(*([None] * (nd - 2) + ["model", None])), leaf.shape)
         return P()
 
     return jax.tree_util.tree_map_with_path(spec_for, params_shape)
+
+
+def flash_shard_specs(mesh: Mesh | None, batch: int, heads: int,
+                      kv_heads: int) -> "P | None":
+    """The PartitionSpec to shard_map flash attention with, or None.
+
+    Flash q/k/v/o all travel in (B, H|Hkv, S, D) layout and shard the same
+    way: batch over DP, heads over "model".  Head sharding needs BOTH head
+    counts to divide the model axis — contiguous equal blocks keep every
+    GQA group (q-head j with kv-head j // g) on one shard, so the kernel
+    never crosses shards.  None means the mesh can't split the call
+    cleanly (or is trivial) and the caller should dispatch unsharded.
+    """
+    if mesh is None or "model" not in mesh.axis_names:
+        return None
+    n_model = mesh.shape["model"]
+    dp = dp_axes(mesh)
+    n_dp = dp_size(mesh)
+    b_ax = dp if (n_dp > 1 and batch % n_dp == 0) else None
+    h_ax = "model" if (n_model > 1 and heads % n_model == 0
+                       and kv_heads % n_model == 0) else None
+    if b_ax is None and h_ax is None:
+        return None
+    return P(b_ax, h_ax, None, None)
+
+
+def serve_kv_shard(mesh: Mesh | None, kv_heads: int, s: int) -> str:
+    """How the serve pool's (B, Hkv, S, hd) cache shards under ``mesh``.
+
+    "heads": kv-heads over "model" (the natural GQA split); "seq": the
+    sequence axis over "model" with the flash-combine collective merging
+    per-shard softmax partials; "none": replicated.  The slot (batch) axis
+    is NEVER sharded — data parallelism in serving is separate engine
+    replicas, and a sharded slot axis would turn ``scatter_request``'s
+    join into a cross-device scatter.  The ONE rule ``serve_cache_specs``,
+    ``attn_decode``, and the capacity planner all consult, so placement
+    and compute can't drift.
+    """
+    if mesh is None or "model" not in mesh.axis_names:
+        return "none"
+    n_model = mesh.shape["model"]
+    if n_model == 1:
+        return "none"
+    if kv_heads % n_model == 0:
+        return "heads"
+    if s % n_model == 0:
+        return "seq"
+    return "none"
+
+
+def serve_cache_specs(cfg: ModelConfig, cache_shape, mesh: Mesh) -> Any:
+    """Slot-pool cache specs for the continuous-batching engine.
+
+    Per :func:`serve_kv_shard`; leaves the engine doesn't shard (per-slot
+    ``pos`` lengths, SSM/conv state) are replicated."""
+
+    def spec_for(path, leaf):
+        name = _path_names(path)[-1]
+        shape = leaf.shape
+        if name in ("k", "v") and len(shape) == 5:       # (L, B, Hkv, S, hd)
+            mode = serve_kv_shard(mesh, shape[2], shape[3])
+            if mode == "heads":
+                return P(None, None, "model", None, None)
+            if mode == "seq":
+                return P(None, None, None, "model", None)
+        if name in ("k_scale", "v_scale") and len(shape) == 4:  # (L,B,Hkv,S)
+            mode = serve_kv_shard(mesh, shape[2], shape[3])
+            if mode == "heads":
+                return P(None, None, "model", None)
+            if mode == "seq":
+                return P(None, None, None, "model")
+        return P()
+
+    return jax.tree_util.tree_map_with_path(spec_for, cache_shape)
+
+
+def spec_shards(mesh: Mesh, spec: P) -> int:
+    """Number of devices a PartitionSpec splits one array across."""
+    n = 1
+    for entry in spec:
+        if entry is None:
+            continue
+        for ax in ((entry,) if isinstance(entry, str) else entry):
+            n *= mesh.shape[ax]
+    return n
 
 
 def batch_specs(cfg: ModelConfig, batch_shape, mesh: Mesh) -> Any:

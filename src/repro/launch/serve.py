@@ -52,7 +52,7 @@ def _kv_banner(cfg, args, s_total: int):
           f"(requested {args.kv_splits}, cache {s_total} slots)")
 
 
-def run_engine(args, cfg, params) -> int:
+def run_engine(args, cfg, params, mesh=None) -> int:
     from repro.serve import ServeEngine, supports, synthetic_trace
 
     if not supports(cfg):
@@ -70,11 +70,19 @@ def run_engine(args, cfg, params) -> int:
         kv_backend=args.kv_backend, kv_splits=args.kv_splits,
         temperature=args.temperature, top_k=args.top_k, seed=args.seed,
         max_prefill_per_step=args.max_prefill_per_step,
-        mem_budget_bytes=budget)
+        mem_budget_bytes=budget, mesh=mesh)
     # one source of truth for capacity: the engine's own clamp/accounting
-    print(f"capacity: {engine.pool.bytes_per_slot()/2**20:.2f} MB/slot at "
+    if mesh is not None:
+        from repro.distributed import sharding as shd
+        print(f"mesh: {describe(mesh)}, kv cache sharded over "
+              f"'{shd.serve_kv_shard(mesh, cfg.n_kv, args.max_len)}', "
+              f"{engine.pool.bytes_per_slot_per_device()/2**20:.2f} "
+              f"MB/slot PER DEVICE")
+    print(f"capacity: {engine.pool.bytes_per_slot_per_device()/2**20:.2f} "
+          f"MB/slot{'/device' if mesh is not None else ''} at "
           f"max_len={args.max_len}"
-          + (f" -> budget {args.mem_budget_mb} MB admits "
+          + (f" -> budget {args.mem_budget_mb} MB"
+             f"{' per device' if mesh is not None else ''} admits "
              f"{engine.pool.max_slots} of "
              f"{args.max_slots} requested slots" if budget else ""))
     t0 = time.time()
@@ -171,12 +179,15 @@ def run_lockstep(args, cfg, params) -> int:
 
 def run(args):
     mesh = make_mesh_for(max_model=args.max_model)
-    print(f"mesh: {describe(mesh)}")
+    print(f"mesh: {describe(mesh)} ({mesh.size} devices)")
     cfg = configs.smoke_config(args.arch) if args.smoke \
         else configs.get_config(args.arch)
     params = transformer.init_params(cfg, jax.random.PRNGKey(args.seed))
     if args.engine:
-        return run_engine(args, cfg, params)
+        # single-device mesh adds nothing but sharding plumbing — keep the
+        # engine on the exact unsharded path there
+        return run_engine(args, cfg, params,
+                          mesh=mesh if mesh.size > 1 else None)
     return run_lockstep(args, cfg, params)
 
 

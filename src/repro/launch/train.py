@@ -123,7 +123,12 @@ def _auto_remat(cfg, args, mesh, batch_sds) -> CheckpointConfig:
 
 def run(args):
     mesh = make_mesh_for(max_model=args.max_model)
-    print(f"mesh: {describe(mesh)}")
+    print(f"mesh: {describe(mesh)} ({mesh.size} devices)")
+    if args.mem_budget_mb > 0:
+        from repro.distributed import sharding as shd
+        print(f"mem budget: {args.mem_budget_mb} MiB PER DEVICE "
+              f"(microbatch = batch / {shd.dp_size(mesh)} dp shards; "
+              f"attention residuals / {mesh.shape['model']} model shards)")
     cfg = configs.smoke_config(args.arch) if args.smoke \
         else configs.get_config(args.arch)
     if args.attn_backend is not None:

@@ -128,10 +128,24 @@ def attn_block(p, x, cfg, *, positions, window: int = 0, layer_window=None,
         # windows (hybrid scan) and M-RoPE; unsupported shapes fall back to
         # ref inside the op (one-time warning).
         from repro.kernels.flash import ops as flash_ops
-        out = flash_ops.flash_attention(
-            jnp.swapaxes(q, 1, 2), jnp.swapaxes(k, 1, 2),
-            jnp.swapaxes(v, 1, 2), causal=True, window=w,
+        fa = functools.partial(
+            flash_ops.flash_attention, causal=True, window=w,
             backend=cfg.attn_backend, resid_dtype=flash_resid_dtype)
+        if mesh is not None:
+            # shard_map over (data, model): batch rows and whole GQA groups
+            # stay shard-local, so each device runs the UNCHANGED kernel on
+            # its slice — no XLA partitioning decisions inside the kernel,
+            # and the custom_vjp residuals are per-device by construction.
+            # flash_shard_specs is None when the mesh can't split cleanly
+            # (then the unsharded dispatch below lets XLA place it).
+            from repro.distributed import sharding as shd
+            spec = shd.flash_shard_specs(mesh, b, h, hkv)
+            if spec is not None:
+                from jax.experimental.shard_map import shard_map
+                fa = shard_map(fa, mesh=mesh, in_specs=(spec, spec, spec),
+                               out_specs=spec, check_rep=False)
+        out = fa(jnp.swapaxes(q, 1, 2), jnp.swapaxes(k, 1, 2),
+                 jnp.swapaxes(v, 1, 2))
         out = jnp.swapaxes(out, 1, 2)
     else:
         out = gqa_attention(q, k, v, q_pos=pos1d, k_pos=pos1d, window=w,
@@ -260,7 +274,8 @@ def _write_token(cache, new, at):
 
 def attn_decode(p, x_t, cfg, cache_k, cache_s_k, cache_v, cache_s_v, pos,
                 *, window: int = 0, quantized: bool = True, backend: str = "ref",
-                splits: int = 1, rolling: bool = False):
+                splits: int = 1, rolling: bool = False, mesh=None,
+                kv_shard: str = "none"):
     """One-token GQA decode against a (possibly int8) cache.
 
     x_t: (B, D_model); cache_k/v: (B, Hkv, S, hd) int8 (or bf16 when not
@@ -281,6 +296,15 @@ def attn_decode(p, x_t, cfg, cache_k, cache_s_k, cache_v, cache_s_v, pos,
     lengths can't express (a window band over a non-rolling cache, or a
     traced per-layer window) fall back to the dense bias.  ``splits``
     selects the kernel's split-K fan-out.
+
+    ``kv_shard`` (from ``sharding.serve_kv_shard``) names how the cache is
+    laid out under ``mesh``: "heads" needs no code change here — XLA keeps
+    the per-kv-head einsums and token write shard-local — while "seq"
+    routes through ``collectives.sp_decode_attention_int8`` so the token
+    write and softmax run per-shard with one flash-combine, instead of XLA
+    re-sharding the cache around a dynamic_update_slice on its sharded
+    sequence axis.  "seq" requires a quantized cache (the serve pool's
+    only layout).
     Returns (attn_out (B, D_model), new k/v token (B, Hkv, hd)).
     """
     b, _ = x_t.shape
@@ -330,13 +354,21 @@ def attn_decode(p, x_t, cfg, cache_k, cache_s_k, cache_v, cache_s_v, pos,
     if quantized:
         kq_new, ks_new = kvq_ops.quantize_kv(k_new)
         vq_new, vs_new = kvq_ops.quantize_kv(v_new)
-        ck = _write_token(cache_k, kq_new, write_at)
-        cv = _write_token(cache_v, vq_new, write_at)
-        csk = _write_token(cache_s_k, ks_new, write_at)
-        csv = _write_token(cache_s_v, vs_new, write_at)
-        out = kvq_ops.decode_attention(q, ck, csk, cv, csv, lengths=lengths,
-                                       bias=bias, backend=backend,
-                                       splits=splits)
+        if kv_shard == "seq" and mesh is not None and not rolling:
+            from repro.distributed import collectives
+            out, ck, csk, cv, csv = collectives.sp_decode_attention_int8(
+                q, cache_k, cache_s_k, cache_v, cache_s_v,
+                (kq_new, ks_new, vq_new, vs_new),
+                jnp.broadcast_to(write_at, (b,)), mesh,
+                sm_scale=hd ** -0.5, lengths=lengths, bias=bias)
+        else:
+            ck = _write_token(cache_k, kq_new, write_at)
+            cv = _write_token(cache_v, vq_new, write_at)
+            csk = _write_token(cache_s_k, ks_new, write_at)
+            csv = _write_token(cache_s_v, vs_new, write_at)
+            out = kvq_ops.decode_attention(q, ck, csk, cv, csv,
+                                           lengths=lengths, bias=bias,
+                                           backend=backend, splits=splits)
     else:
         ck = _write_token(cache_k, k_new.astype(cache_k.dtype), write_at)
         cv = _write_token(cache_v, v_new.astype(cache_v.dtype), write_at)

@@ -694,6 +694,14 @@ def decode_step(params, cfg: ModelConfig, cache: dict, tokens_t, *,
     static_window = int(cfg.window) if not cfg.global_layers else None
     windows = None if static_window is not None else layer_windows(cfg)
 
+    # mesh-aware cache layout (serve pool): "heads" needs no special
+    # handling (XLA keeps per-kv-head work local), "seq" switches
+    # attn_decode to the write+flash-combine collective
+    kv_shard = "none"
+    if mesh is not None and "k" in cache and cfg.mla is None:
+        from repro.distributed import sharding as shd
+        kv_shard = shd.serve_kv_shard(mesh, cfg.n_kv, cache["k"].shape[3])
+
     layer_caches = {k: v for k, v in cache.items() if k != "pos"}
 
     def body(carry, xs):
@@ -710,7 +718,8 @@ def decode_step(params, cfg: ModelConfig, cache: dict, tokens_t, *,
             mix, (ck, csk, cv, csv) = attn.attn_decode(
                 p_layer["attn"], h, cfg, lc["k"], lc["k_scale"], lc["v"],
                 lc["v_scale"], pos, window=win, quantized=quantized,
-                backend=kvq_backend, splits=kvq_splits)
+                backend=kvq_backend, splits=kvq_splits, mesh=mesh,
+                kv_shard=kv_shard)
             new_lc.update(k=ck, k_scale=csk, v=cv, v_scale=csv)
         if cfg.mixer == "ssm":
             mix, nconv, nssm = ssm_mod.ssm_decode_step(

@@ -159,7 +159,8 @@ def flash_training_eligible(cfg, s: int) -> bool:
 
 def attn_resid_bytes(cfg, b: int, s: int, ctx: int,
                      dtype_bytes: int = 2,
-                     flash_resid_bytes: "int | None" = None) -> int:
+                     flash_resid_bytes: "int | None" = None,
+                     model_shards: int = 1) -> int:
     """Backward-residual bytes of one attention layer, backend-aware.
 
     Both paths keep q/o per query head and k/v per KV head alive between
@@ -177,16 +178,26 @@ def attn_resid_bytes(cfg, b: int, s: int, ctx: int,
     is active (e.g. 2 for bf16-stored residuals under f32 compute);
     default: residuals follow the compute dtype.  The (m, l) stats are
     budgeted at f32 regardless — exactly the kernel contract.
+
+    ``model_shards`` divides the per-HEAD terms (q/o, k/v, probs, stats)
+    when heads shard over the mesh's model axis (both head counts must
+    divide — the same gate ``sharding.flash_shard_specs`` applies to the
+    kernel dispatch, so the planner budgets exactly what each chip holds);
+    an indivisible head count leaves residuals whole, matching the
+    replicated fallback.
     """
     if cfg.mixer not in ("attn", "hybrid"):
         return 0
+    ms = model_shards if (model_shards > 1
+                          and cfg.n_heads % model_shards == 0
+                          and cfg.n_kv % model_shards == 0) else 1
     if not flash_training_eligible(cfg, s):
         qo_kv = (2 * cfg.n_heads + 2 * cfg.n_kv) * b * s * cfg.head_dim \
             * dtype_bytes
-        return qo_kv + 4 * b * cfg.n_heads * s * ctx       # f32 probs
+        return (qo_kv + 4 * b * cfg.n_heads * s * ctx) // ms   # f32 probs
     rb = dtype_bytes if flash_resid_bytes is None else flash_resid_bytes
     qo_kv = (2 * cfg.n_heads + 2 * cfg.n_kv) * b * s * cfg.head_dim * rb
-    return qo_kv + 2 * 4 * b * cfg.n_heads * s             # f32 m, l rows
+    return (qo_kv + 2 * 4 * b * cfg.n_heads * s) // ms     # f32 m, l rows
 
 
 def _flash_tile_counts(cfg, s: int) -> "list[dict]":
@@ -347,7 +358,7 @@ def kv_cache_report(cfg, b: int, s: int) -> dict:
 
 def serve_capacity_report(cfg, s_max: int, budget_bytes: int, *,
                           quantized: bool = True,
-                          params_bytes: int = 0) -> dict:
+                          params_bytes: int = 0, mesh=None) -> dict:
     """Max resident request slots a serve-memory budget admits.
 
     The serving mirror of the training budget solver: the slot pool
@@ -358,29 +369,55 @@ def serve_capacity_report(cfg, s_max: int, budget_bytes: int, *,
     scale rows, or the bf16 leaves when not quantized, plus SSM/conv
     state on hybrid archs).  ``kv_int8_bytes_per_slot`` cross-references
     :func:`kv_cache_report`'s two-tier accounting for the attention share.
+
+    With ``mesh``, ``budget_bytes`` means bytes PER CHIP (the same
+    contract the training planner applies): each K/V leaf divides by the
+    shard factor ``sharding.serve_kv_shard`` actually applies on that
+    mesh, giving ``bytes_per_slot_per_device``, and ``max_slots`` becomes
+    what one chip's budget admits — slots are replicated across the mesh
+    (every device holds its slice of EVERY slot), so one chip bounds
+    residency.  ``bytes_per_slot_per_device x model_shards >=
+    bytes_per_slot`` never rounds capacity up.
     """
     from repro.models import transformer
     cache_sds = jax.eval_shape(
         lambda: transformer.init_cache(cfg, 1, s_max, quantized=quantized))
     bytes_per_slot = sum(x.size * x.dtype.itemsize
                          for k, x in cache_sds.items() if k != "pos")
+    shard = 1
+    kv_mode = "none"
+    devices = 1
+    if mesh is not None:
+        from repro.distributed import sharding as shd
+        devices = mesh.size
+        kv_mode = shd.serve_kv_shard(mesh, cfg.n_kv, s_max)
+        if kv_mode != "none":
+            shard = mesh.shape["model"]
+    per_dev = sum(
+        (x.size * x.dtype.itemsize)
+        // (shard if k in ("k", "v", "k_scale", "v_scale") else 1)
+        for k, x in cache_sds.items() if k != "pos")
     kv_rep = kv_cache_report(cfg, 1, s_max)
     usable = max(0, int(budget_bytes) - int(params_bytes))
     return {
         "eligible": bytes_per_slot > 0,
         "bytes_per_slot": int(bytes_per_slot),
+        "bytes_per_slot_per_device": int(per_dev),
         "kv_int8_bytes_per_slot": int(kv_rep["int8_bytes"]),
         "budget_bytes": int(budget_bytes),
         "params_bytes": int(params_bytes),
-        "max_slots": (usable // bytes_per_slot) if bytes_per_slot else 0,
+        "max_slots": (usable // per_dev) if per_dev else 0,
+        "devices": int(devices),
+        "model_shards": int(shard),
+        "kv_shard": kv_mode,
         "s_max": int(s_max),
         "quantized": bool(quantized),
     }
 
 
 def profile_transformer(cfg, batch_sds, *, dtype_bytes: int = 2,
-                        flash_resid_bytes: "int | None" = None
-                        ) -> ChainProfile:
+                        flash_resid_bytes: "int | None" = None,
+                        model_shards: int = 1) -> ChainProfile:
     """Profile the block scan: carry bytes + window-aware analytic FLOPs.
 
     ``batch_sds`` is the train input-spec dict ({tokens: (B, S), ...}).
@@ -399,6 +436,14 @@ def profile_transformer(cfg, batch_sds, *, dtype_bytes: int = 2,
     that skip whole-masked KV tiles — so flash-eligible layers are
     budgeted at the visited-tile count (causal ~1/2 of dense, window
     ~W/S), exactly what the remat DP pays to recompute that layer.
+
+    ``model_shards`` (the mesh's TP width) makes the profile PER-DEVICE:
+    ``batch_sds`` is already the per-device microbatch (DP divides batch
+    upstream, ``train_step.microbatch_specs``), the (B, S, D) carry is
+    replicated over the model axis so it stays whole, and the attention
+    residuals divide by the head shards each chip actually holds
+    (:func:`attn_resid_bytes`) — together ``--mem-budget-mb`` means bytes
+    per CHIP, on every mesh.
     """
     from repro.models import transformer
     b, s = batch_sds["tokens"].shape
@@ -427,7 +472,8 @@ def profile_transformer(cfg, batch_sds, *, dtype_bytes: int = 2,
         flops.append(2.0 * b * s * per_block_params + attn_flops)
         act.append(carry_bytes)
         resid.append(attn_resid_bytes(cfg, b, s, ctx, dtype_bytes,
-                                      flash_resid_bytes=flash_resid_bytes))
+                                      flash_resid_bytes=flash_resid_bytes,
+                                      model_shards=model_shards))
         labels.append(f"block{i}" + ("" if w == 0 else f"@w{w}"))
     return ChainProfile(tuple(act), tuple(flops), tuple(labels),
                         tuple(resid))

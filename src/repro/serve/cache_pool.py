@@ -63,7 +63,7 @@ class SlotPool:
     """
 
     def __init__(self, cfg: ModelConfig, max_slots: int, max_len: int, *,
-                 quantized: bool = True):
+                 quantized: bool = True, mesh=None):
         if max_slots < 1:
             raise ValueError(f"SlotPool: max_slots must be >= 1, "
                              f"got {max_slots}")
@@ -71,11 +71,21 @@ class SlotPool:
         self.max_slots = max_slots
         self.max_len = max_len
         self.quantized = quantized
+        self.mesh = mesh
         self.cache = transformer.init_cache(cfg, max_slots, max_len,
                                             quantized=quantized)
         # per-slot lengths replace the lockstep scalar position: occupancy
         # is data, not shape
         self.cache["pos"] = jnp.zeros((max_slots,), jnp.int32)
+        # mesh mode: K/V shard over "model" (kv-heads, or the sequence dim
+        # as serve_kv_shard falls back); the slot axis stays whole — DP in
+        # serving is separate engine replicas, not a sharded pool
+        self.specs = None
+        if mesh is not None:
+            from repro.distributed import sharding as shd
+            self.specs = shd.serve_cache_specs(cfg, self.cache, mesh)
+            self.cache = jax.device_put(
+                self.cache, shd.to_shardings(mesh, self.specs))
         self._free = list(range(max_slots - 1, -1, -1))   # pop() -> slot 0 first
         self._live: set[int] = set()
         self.allocs = 0
@@ -113,4 +123,18 @@ class SlotPool:
         max_slots — every leaf's batch axis is the slot axis)."""
         total = sum(x.size * x.dtype.itemsize
                     for k, x in self.cache.items() if k != "pos")
+        return total // self.max_slots
+
+    def bytes_per_slot_per_device(self) -> int:
+        """Bytes one resident request pins on EACH chip: the sharded
+        leaves divide by their shard count, so this is what a per-chip
+        byte budget must admit against.  Equals :meth:`bytes_per_slot`
+        on an unsharded pool."""
+        if self.specs is None:
+            return self.bytes_per_slot()
+        from repro.distributed import sharding as shd
+        total = sum(
+            x.size * x.dtype.itemsize
+            // shd.spec_shards(self.mesh, self.specs[k])
+            for k, x in self.cache.items() if k != "pos")
         return total // self.max_slots

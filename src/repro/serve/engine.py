@@ -65,7 +65,7 @@ class ServeEngine:
                  temperature: float = 0.0, top_k: int = 0, seed: int = 0,
                  eos_id: Optional[int] = None,
                  max_prefill_per_step: int = 1,
-                 mem_budget_bytes: Optional[int] = None):
+                 mem_budget_bytes: Optional[int] = None, mesh=None):
         if not supports(cfg):
             raise NotImplementedError(
                 "ServeEngine needs a GQA attention arch with a uniform "
@@ -73,7 +73,7 @@ class ServeEngine:
                 "cross-attention, or per-layer global overrides) — those "
                 "serve through the lockstep driver")
         self.cfg = cfg
-        self.params = params
+        self.mesh = mesh
         self.max_len = max_len
         self.quantized = quantized
         self.eos_id = eos_id
@@ -81,18 +81,29 @@ class ServeEngine:
         self.capacity_report = None
         if mem_budget_bytes is not None:
             from repro import plan as plan_mod
+            # with a mesh the budget means bytes PER CHIP — the same
+            # contract the training planner applies to --mem-budget-mb
             self.capacity_report = plan_mod.serve_capacity_report(
-                cfg, max_len, mem_budget_bytes, quantized=quantized)
+                cfg, max_len, mem_budget_bytes, quantized=quantized,
+                mesh=mesh)
             cap = self.capacity_report["max_slots"]
             if cap < 1:
                 raise ValueError(
                     f"ServeEngine: memory budget {mem_budget_bytes} admits "
                     f"0 slots at max_len={max_len} "
-                    f"({self.capacity_report['bytes_per_slot']} B/slot)")
+                    f"({self.capacity_report['bytes_per_slot_per_device']} "
+                    f"B/slot/device)")
             max_slots = min(max_slots, cap)
-        self.pool = SlotPool(cfg, max_slots, max_len, quantized=quantized)
+        self.pool = SlotPool(cfg, max_slots, max_len, quantized=quantized,
+                             mesh=mesh)
+        if mesh is not None:
+            from repro.distributed import sharding as shd
+            p_specs = shd.param_specs(cfg, params, mesh=mesh)
+            self._p_shard = shd.to_shardings(mesh, p_specs)
+            params = jax.device_put(params, self._p_shard)
+        self.params = params
         self.scheduler = Scheduler(
-            max_slots, bytes_per_slot=self.pool.bytes_per_slot(),
+            max_slots, bytes_per_slot=self.pool.bytes_per_slot_per_device(),
             byte_budget=mem_budget_bytes,
             max_prefill_per_step=max_prefill_per_step)
         self.metrics = ServeMetrics()
@@ -112,15 +123,18 @@ class ServeEngine:
             logits, cache = transformer.decode_step(
                 params, cfg, cache, tokens, policy=policy,
                 quantized=quantized, kvq_backend=kv_backend,
-                kvq_splits=kv_splits, active=active)
+                kvq_splits=kv_splits, active=active, mesh=mesh)
             sampled = sampling.sample_tokens(
                 logits, key, temperature=self.temperature, top_k=self.top_k)
             return jnp.where(active, sampled, tokens), cache
 
         def _prefill(bucket, params, tokens, true_len):
+            # mesh: _kv_entry pins each cache entry's sharding as it is
+            # built, so the prefill scan carries the pool's layout from the
+            # start instead of XLA re-sharding the finished cache
             logits, aux = transformer.forward(
                 params, cfg, {"tokens": tokens}, policy=policy,
-                build_cache=True, cache_quantized=quantized)
+                build_cache=True, cache_quantized=quantized, mesh=mesh)
             # last VALID position, not bucket-1: padded suffix logits are
             # garbage by contract
             last = jax.lax.dynamic_index_in_dim(logits, true_len - 1, axis=1,
@@ -136,12 +150,53 @@ class ServeEngine:
 
         # donate cache + tokens (both returned); active is reused across
         # steps and must NOT be donated
-        self._decode_fn = jax.jit(_decode, donate_argnums=(1, 2))
-        self._scatter_fn = jax.jit(scatter_request, donate_argnums=(0,))
-        self._join_fn = jax.jit(_join, donate_argnums=(0, 1))
-        self._leave_fn = jax.jit(_leave, donate_argnums=(0,))
-        self._prefill_fns = {
-            b: jax.jit(functools.partial(_prefill, b)) for b in self.buckets}
+        self._rep = None
+        if mesh is None:
+            self._decode_fn = jax.jit(_decode, donate_argnums=(1, 2))
+            self._scatter_fn = jax.jit(scatter_request, donate_argnums=(0,))
+            self._prefill_fns = {
+                b: jax.jit(functools.partial(_prefill, b))
+                for b in self.buckets}
+            self._join_fn = jax.jit(_join, donate_argnums=(0, 1))
+            self._leave_fn = jax.jit(_leave, donate_argnums=(0,))
+        else:
+            # every program pins its shardings explicitly, so the cache's
+            # placement is an INPUT contract, not an XLA choice — decode
+            # and scatter are sharding-preserving end to end and nothing
+            # on the steady-state path can re-gather the pool (asserted
+            # against the compiled HLO via decode_hlo() in tests)
+            from jax.sharding import NamedSharding, PartitionSpec as P
+            from repro.distributed import sharding as shd
+            rep = NamedSharding(mesh, P())
+            c_shard = shd.to_shardings(mesh, self.pool.specs)
+            req_sds = jax.eval_shape(
+                lambda: transformer.init_cache(cfg, 1, max_len,
+                                               quantized=quantized))
+            req_shard = shd.to_shardings(
+                mesh, shd.serve_cache_specs(cfg, req_sds, mesh))
+            self._decode_fn = jax.jit(
+                _decode, donate_argnums=(1, 2),
+                in_shardings=(self._p_shard, c_shard, rep, rep, rep),
+                out_shardings=(rep, c_shard))
+            self._scatter_fn = jax.jit(
+                scatter_request, donate_argnums=(0,),
+                in_shardings=(c_shard, req_shard, rep, rep),
+                out_shardings=c_shard)
+            self._prefill_fns = {
+                b: jax.jit(functools.partial(_prefill, b),
+                           in_shardings=(self._p_shard, rep, rep),
+                           out_shardings=(rep, req_shard))
+                for b in self.buckets}
+            # join/leave must pin shardings too: an unspecified jit would
+            # commit tokens/active to one device, and every downstream
+            # program keyed on the committed layout would recompile
+            self._join_fn = jax.jit(
+                _join, donate_argnums=(0, 1),
+                in_shardings=(rep, rep, rep, rep), out_shardings=(rep, rep))
+            self._leave_fn = jax.jit(
+                _leave, donate_argnums=(0,),
+                in_shardings=(rep, rep), out_shardings=rep)
+            self._rep = rep
         self._sampler = sampling.make_sampler(temperature=self.temperature,
                                               top_k=self.top_k)
 
@@ -151,8 +206,8 @@ class ServeEngine:
         self._next_rid = 0
         self._slot_req: dict[int, Request] = {}
         self._requests_done: list[Request] = []
-        self._tokens_dev = jnp.zeros((max_slots,), jnp.int32)
-        self._active_dev = jnp.zeros((max_slots,), bool)
+        self._tokens_dev = self._replicated(jnp.zeros((max_slots,), jnp.int32))
+        self._active_dev = self._replicated(jnp.zeros((max_slots,), bool))
         self._active_buf = np.zeros((max_slots,), bool)    # host mirror
 
     # -- public API --------------------------------------------------------
@@ -182,6 +237,14 @@ class ServeEngine:
         self.scheduler.submit(req)
         self.metrics.on_submit(req.rid, self._step_no)
         return req.rid
+
+    def decode_hlo(self) -> str:
+        """Compiled-HLO text of the decode round, at the live buffers'
+        exact shapes/shardings — what tests grep to assert the KV cache
+        is never all-gathered after warmup."""
+        return self._decode_fn.lower(
+            self.params, self.pool.cache, self._tokens_dev,
+            self._active_dev, self._key).compile().as_text()
 
     def compile_counts(self) -> dict:
         """jit program-cache sizes — the zero-recompile contract's meter."""
@@ -226,9 +289,10 @@ class ServeEngine:
         assert self.scheduler.resident == 0 and not self.scheduler.has_work(), \
             "reset with in-flight requests"
         self.pool = SlotPool(self.cfg, self.pool.max_slots, self.max_len,
-                             quantized=self.quantized)
+                             quantized=self.quantized, mesh=self.mesh)
         self.scheduler = Scheduler(
-            self.pool.max_slots, bytes_per_slot=self.pool.bytes_per_slot(),
+            self.pool.max_slots,
+            bytes_per_slot=self.pool.bytes_per_slot_per_device(),
             byte_budget=self.scheduler.byte_budget,
             max_prefill_per_step=self.scheduler.max_prefill_per_step)
         self.metrics = ServeMetrics()
@@ -237,11 +301,18 @@ class ServeEngine:
         self._next_rid = 0
         self._slot_req.clear()
         self._requests_done.clear()
-        self._tokens_dev = jnp.zeros((self.pool.max_slots,), jnp.int32)
-        self._active_dev = jnp.zeros((self.pool.max_slots,), bool)
+        self._tokens_dev = self._replicated(
+            jnp.zeros((self.pool.max_slots,), jnp.int32))
+        self._active_dev = self._replicated(
+            jnp.zeros((self.pool.max_slots,), bool))
         self._active_buf[:] = False
 
     # -- engine internals --------------------------------------------------
+    def _replicated(self, x):
+        """Commit a host-built buffer to the mesh (replicated) so every
+        program sees one consistent placement; no-op without a mesh."""
+        return x if self._rep is None else jax.device_put(x, self._rep)
+
     def _bucket_for(self, n: int) -> int:
         for b in self.buckets:
             if n <= b:

@@ -58,9 +58,13 @@ def plan_profile(cfg: ModelConfig, tc: TrainConfig, batch_sds: dict,
     dtype_bytes = jnp.dtype(pol.compute_dtype).itemsize
     flash_resid_bytes = None if pol.flash_resid_dtype is None else \
         jnp.dtype(pol.flash_resid_dtype).itemsize
+    model_shards = 1
+    if mesh is not None and "model" in mesh.axis_names:
+        model_shards = mesh.shape["model"]
     return plan_mod.profile_transformer(
         cfg, microbatch_specs(batch_sds, accum=tc.accum, mesh=mesh),
-        dtype_bytes=dtype_bytes, flash_resid_bytes=flash_resid_bytes)
+        dtype_bytes=dtype_bytes, flash_resid_bytes=flash_resid_bytes,
+        model_shards=model_shards)
 
 
 def resolve_remat(cfg: ModelConfig, tc: TrainConfig, batch_sds: dict,
@@ -151,7 +155,7 @@ def make_train_step(cfg: ModelConfig, mesh, tc: TrainConfig,
     step = build_train_step(cfg, tc, mesh=mesh)
     params_sds = jax.eval_shape(
         lambda: transformer.init_params(cfg, jax.random.PRNGKey(0)))
-    p_spec = shd.param_specs(cfg, params_sds)
+    p_spec = shd.param_specs(cfg, params_sds, mesh=mesh)
     p_shard = shd.to_shardings(mesh, p_spec)
     opt_shard = adamw.AdamWState(mu=p_shard, nu=p_shard,
                                  count=NamedSharding(mesh, P()))
