@@ -578,11 +578,41 @@ def serve_trace():
     eng = ServeEngine(params, cfg, max_slots=slots, max_len=max_len,
                       prompt_buckets=(bucket,), seed=0)
     compiles = eng.warmup()
-    t0 = time.perf_counter()
-    summary = eng.run(trace)
-    wall_e = time.perf_counter() - t0
+    # best-of-3 (reset keeps the compiled programs): the lockstep baseline
+    # below gets a full warm data pass before its timed run, so the engine
+    # must get the same steady-state treatment or run-to-run allocator
+    # noise swamps the comparison
+    wall_e = float("inf")
+    for _ in range(3):
+        eng.reset()
+        t0 = time.perf_counter()
+        summary = eng.run(trace)
+        wall_e = min(wall_e, time.perf_counter() - t0)
     assert eng.compile_counts() == compiles, "engine re-jitted mid-trace"
     assert summary["total_tokens"] == useful
+
+    # ---- same trace under seeded faults (ISSUE 7): the canonical
+    # detect -> quarantine -> replay run.  Victims and steps are pinned to
+    # this seeded trace (replay prompts must fit the 16-token bucket; a
+    # drop_scatter victim must land on a first-use slot for the pos>0
+    # sentinel); the injected-count asserts catch any drift.
+    from repro.serve import FaultInjector, FaultPlan
+    wall_f = float("inf")
+    for _ in range(3):
+        eng.reset()
+        plan = (FaultPlan().drop_scatter(3, rid=3).nan_logits(5, rid=0)
+                .corrupt_row(15, rid=6))
+        inj = FaultInjector(eng, plan)
+        t0 = time.perf_counter()
+        fsum = eng.run(trace)
+        wall_f = min(wall_f, time.perf_counter() - t0)
+        inj.uninstall()
+        assert dict(inj.injected) == {"drop_scatter": 1, "nan_logits": 1,
+                                      "corrupt_row": 1}, inj.injected
+    assert eng.compile_counts() == compiles, "fault injection re-jitted"
+    assert fsum["n_failed"] == 0 and fsum["n_done"] == len(trace)
+    leaks = eng.pool.allocs - eng.pool.frees + eng.pool.occupancy
+    goodput_f = fsum["goodput_tokens"] / wall_f
 
     # ---- lockstep baseline: same trace, fixed FCFS groups of `slots`
     prefill = jax.jit(build_prefill_step(cfg, quantized=True,
@@ -614,9 +644,11 @@ def serve_trace():
         return slot_steps, ttfts / len(trace)
 
     run_lockstep()                                      # compile warmup
-    t0 = time.perf_counter()
-    slot_steps, ttft_lock = run_lockstep()
-    wall_l = time.perf_counter() - t0
+    wall_l = float("inf")
+    for _ in range(3):
+        t0 = time.perf_counter()
+        slot_steps, ttft_lock = run_lockstep()
+        wall_l = min(wall_l, time.perf_counter() - t0)
 
     tps_e = useful / wall_e
     tps_l = useful / wall_l
@@ -638,7 +670,21 @@ def serve_trace():
             "wasted_slot_steps": slot_steps - useful,
         },
         "speedup_tokens_per_s": round(tps_e / tps_l, 2),
+        "fault_trace": {
+            "injected": dict(inj.injected),
+            "n_faults": fsum["n_faults"], "n_retried": fsum["n_retried"],
+            "n_done": fsum["n_done"], "n_failed": fsum["n_failed"],
+            "retry_success_rate": fsum["retry_success_rate"],
+            "goodput_tokens": fsum["goodput_tokens"],
+            "goodput_tokens_per_s": round(goodput_f, 1),
+            "goodput_frac_of_fault_free": round(goodput_f / tps_e, 3),
+            "quarantines": eng.pool.quarantines,
+            "zero_slot_leaks": leaks == 0,
+            "engine_steps": fsum["n_steps"],
+        },
     }
+    _rows("serve_trace_faulted", wall_f * 1e6,
+          f"goodput_tok_s={goodput_f:.1f},faults={fsum['n_faults']}")
     _rows("serve_trace_continuous", wall_e * 1e6,
           f"tok_s={tps_e:.1f},occ={summary['occupancy_mean']:.2f}")
     _rows("serve_trace_lockstep", wall_l * 1e6, f"tok_s={tps_l:.1f}")

@@ -16,6 +16,7 @@ Design (multi-host ready, exercised single-host here):
 from __future__ import annotations
 
 import dataclasses
+import hashlib
 import json
 import os
 import shutil
@@ -25,6 +26,12 @@ from typing import Any, Optional
 import jax
 import jax.numpy as jnp
 import numpy as np
+
+
+class CheckpointMismatchError(ValueError):
+    """The checkpoint on disk disagrees with what the caller expects —
+    restoring one model's checkpoint into another's tree, or re-saving a
+    different state over an existing step."""
 
 
 def _flatten_with_paths(tree):
@@ -41,6 +48,42 @@ def _flatten_with_paths(tree):
 
 def tree_paths(tree) -> list[str]:
     return sorted(_flatten_with_paths(tree))
+
+
+def _leaf_sig(tree) -> dict[str, dict]:
+    """Manifest-style {path: {shape, dtype}} for a pytree (arrays or
+    ShapeDtypeStructs)."""
+    out = {}
+    for key, leaf in _flatten_with_paths(tree).items():
+        dtype = getattr(leaf, "dtype", None) or np.asarray(leaf).dtype
+        out[key] = {"shape": [int(s) for s in jnp.shape(leaf)],
+                    "dtype": str(dtype)}
+    return out
+
+
+def _sig_fingerprint(sig: dict[str, dict]) -> str:
+    items = [[k, sig[k]["shape"], sig[k]["dtype"]] for k in sorted(sig)]
+    return hashlib.sha256(json.dumps(items).encode()).hexdigest()
+
+
+def tree_fingerprint(tree) -> str:
+    """Structure fingerprint: sha256 over the sorted (leaf path, shape,
+    dtype) triples.  Values don't enter — the fingerprint identifies the
+    ARCHITECTURE a checkpoint belongs to, cheap enough to verify on
+    every save/restore."""
+    return _sig_fingerprint(_leaf_sig(tree))
+
+
+def _sig_diff(a: dict[str, dict], b: dict[str, dict], n: int = 5) -> str:
+    """Human-readable first differences between two leaf signatures."""
+    lines = []
+    for k in sorted(set(a) | set(b)):
+        if a.get(k) != b.get(k):
+            lines.append(f"  {k}: checkpoint={a.get(k)} target={b.get(k)}")
+        if len(lines) >= n:
+            lines.append("  ...")
+            break
+    return "\n".join(lines) or "  (tree structures identical?)"
 
 
 @dataclasses.dataclass
@@ -70,30 +113,55 @@ class CheckpointManager:
         return steps[-1] if steps else None
 
     # -------------------------------------------------------------- save --
-    def save(self, step: int, state: Any, *, extra: dict | None = None):
-        """Atomic save of a pytree of jax/np arrays."""
+    def save(self, step: int, state: Any, *, extra: dict | None = None,
+             config: Optional[str] = None):
+        """Atomic save of a pytree of jax/np arrays.
+
+        ``config`` is an architecture identity string (e.g.
+        ``cfg.arch_id``) stored in the manifest and verified on restore.
+        Re-saving an existing step is a no-op ONLY if the manifest
+        matches (step + leaf shapes/dtypes + config); a conflicting
+        re-save raises :class:`CheckpointMismatchError` instead of
+        silently pretending it succeeded."""
         final = self._step_dir(step)
-        if os.path.exists(final):      # re-save of an existing step: no-op
-            return
+        sig = _leaf_sig(state)
+        if os.path.exists(final):
+            with open(os.path.join(final, "manifest.json")) as f:
+                have = json.load(f)
+            mismatch = []
+            if have["step"] != step:
+                mismatch.append(f"step: on-disk {have['step']} != {step}")
+            if have.get("leaves") != sig:
+                mismatch.append("leaf shapes/dtypes differ:\n"
+                                + _sig_diff(have.get("leaves", {}), sig))
+            if (config is not None and have.get("config") is not None
+                    and have["config"] != config):
+                mismatch.append(f"config: on-disk {have['config']!r} "
+                                f"!= {config!r}")
+            if mismatch:
+                raise CheckpointMismatchError(
+                    f"save: step {step} already exists at {final} with a "
+                    f"DIFFERENT state — refusing the silent no-op:\n"
+                    + "\n".join(mismatch))
+            return                      # identical manifest: idempotent save
         tmp = final + ".tmp"
         if os.path.exists(tmp):
             shutil.rmtree(tmp)
         os.makedirs(tmp)
 
         flat = _flatten_with_paths(state)
-        arrays, manifest_leaves = {}, {}
+        arrays = {}
         for key, leaf in flat.items():
-            arr = np.asarray(jax.device_get(leaf))
-            arrays[key.replace("/", "__")] = arr
-            manifest_leaves[key] = {"shape": list(arr.shape),
-                                    "dtype": str(arr.dtype)}
+            arrays[key.replace("/", "__")] = np.asarray(jax.device_get(leaf))
         proc = jax.process_index()
         np.savez(os.path.join(tmp, f"shards_{proc:05d}.npz"), **arrays)
         manifest = {
             "step": step,
             "time": time.time(),
             "process_count": jax.process_count(),
-            "leaves": manifest_leaves,
+            "leaves": sig,
+            "fingerprint": _sig_fingerprint(sig),
+            "config": config,
             "extra": extra or {},
         }
         with open(os.path.join(tmp, "manifest.json"), "w") as f:
@@ -112,12 +180,36 @@ class CheckpointManager:
                               ignore_errors=True)
 
     # ------------------------------------------------------------ restore --
-    def restore(self, step: int, like: Any, *, shardings: Any = None) -> Any:
+    def restore(self, step: int, like: Any, *, shardings: Any = None,
+                config: Optional[str] = None) -> Any:
         """Restore into the structure of ``like``; place onto ``shardings``
-        (any mesh — resharding restore) or leave on default device."""
+        (any mesh — resharding restore) or leave on default device.
+
+        The manifest's structure fingerprint (leaf paths + shapes +
+        dtypes) must match ``like``, and the stored ``config`` identity
+        must match a caller-provided one — a llama3 checkpoint restored
+        into a whisper tree fails HERE with the differing leaves named,
+        not deep in a shape error (or worse, silently)."""
         d = self._step_dir(step)
         with open(os.path.join(d, "manifest.json")) as f:
             manifest = json.load(f)
+        if (config is not None and manifest.get("config") is not None
+                and manifest["config"] != config):
+            raise CheckpointMismatchError(
+                f"restore: checkpoint step {step} was saved for config "
+                f"{manifest['config']!r}, caller expects {config!r}")
+        if manifest.get("fingerprint") is not None:
+            sig = _leaf_sig(like)
+            missing = set(sig) - set(manifest.get("leaves", {}))
+            if missing:
+                raise KeyError(f"checkpoint {step} missing leaves: "
+                               f"{sorted(missing)[:5]}")
+            if _sig_fingerprint(sig) != manifest["fingerprint"]:
+                raise CheckpointMismatchError(
+                    f"restore: checkpoint step {step} does not fit the "
+                    f"target tree (config "
+                    f"{manifest.get('config')!r}):\n"
+                    + _sig_diff(manifest.get("leaves", {}), sig))
         data: dict[str, np.ndarray] = {}
         for name in sorted(os.listdir(d)):
             if name.startswith("shards_") and name.endswith(".npz"):

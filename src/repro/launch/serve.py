@@ -70,7 +70,11 @@ def run_engine(args, cfg, params, mesh=None) -> int:
         kv_backend=args.kv_backend, kv_splits=args.kv_splits,
         temperature=args.temperature, top_k=args.top_k, seed=args.seed,
         max_prefill_per_step=args.max_prefill_per_step,
-        mem_budget_bytes=budget, mesh=mesh)
+        mem_budget_bytes=budget, mesh=mesh,
+        max_queue=args.max_queue or None,
+        deadline_steps=(args.deadline_steps
+                        if args.deadline_steps >= 0 else None),
+        max_retries=args.max_retries)
     # one source of truth for capacity: the engine's own clamp/accounting
     if mesh is not None:
         from repro.distributed import sharding as shd
@@ -114,7 +118,24 @@ def run_engine(args, cfg, params, mesh=None) -> int:
           f"{engine.pool.max_slots} slots "
           f"(queue depth mean {summary['queue_depth_mean']:.2f}, "
           f"max {summary['queue_depth_max']})")
-    assert summary["n_done"] == args.requests
+    failures = (summary["n_cancelled"] + summary["n_dropped"]
+                + summary["n_failed"])
+    if failures or summary["n_rejected"] or summary["n_faults"]:
+        print(f"failure paths: dropped {summary['n_dropped']} "
+              f"cancelled {summary['n_cancelled']} "
+              f"failed {summary['n_failed']} "
+              f"rejected {summary['n_rejected']} "
+              f"(faults {summary['n_faults']}, "
+              f"retries {summary['n_retried']}); "
+              f"goodput {summary['goodput_tokens_per_s']:.1f} tok/s "
+              f"of {summary['tokens_per_s']:.1f}")
+    if summary["stalled"]:
+        print(f"STALLED: {summary['diagnostics']}")
+        return 1
+    # every trace request must be accounted for: finished, shed, or
+    # rejected at the door — nothing silently lost
+    assert summary["n_done"] + failures + summary["n_rejected"] \
+        == args.requests
     assert engine.pool.occupancy == 0 and \
         engine.pool.allocs == engine.pool.frees, "slot leak"
     return 0
@@ -233,6 +254,15 @@ def main():
     ap.add_argument("--mem-budget-mb", type=float, default=0.0,
                     help="engine: clamp resident slots to this KV-pool "
                          "budget (plan.serve_capacity_report)")
+    ap.add_argument("--max-queue", type=int, default=0,
+                    help="engine: bounded queue depth — submits beyond it "
+                         "are rejected (0 = unbounded)")
+    ap.add_argument("--deadline-steps", type=int, default=-1,
+                    help="engine: queue TTL in engine steps — requests "
+                         "still queued past it are DROPPED (-1 = none)")
+    ap.add_argument("--max-retries", type=int, default=2,
+                    help="engine: replay budget per request after a "
+                         "detected decode fault")
     return run(ap.parse_args())
 
 

@@ -4,10 +4,16 @@ Fault-tolerance features wired here:
   * resume from the latest atomic checkpoint (params + optimizer + loss
     scale + data-iterator state) — restart-safe;
   * SIGTERM/SIGINT -> save-and-exit (preemption handling);
-  * periodic + final checkpointing (keep-last GC);
+  * periodic + final checkpointing (keep-last GC), with the config
+    fingerprint verified on restore (a checkpoint from a different arch
+    fails loudly, never silently);
   * step watchdog: a daemon thread logs (and would page, in production) if
     a step exceeds ``watchdog_factor`` x the trailing-median step time —
     straggler/hang mitigation;
+  * ``--guard``: NaN/Inf-grad steps apply no update (in-jit skip via
+    ``TrainConfig.skip_nonfinite``) and a rolling-median loss-spike
+    detector (``train/guards.py``) escalates consecutive bad steps to a
+    rollback that restores the last good checkpoint and replays;
   * elastic restarts: the mesh is built from however many devices exist
     (launch.mesh.make_mesh_for) and restore reshards into it.
 
@@ -36,6 +42,7 @@ from repro.data.synthetic import token_stream
 from repro.launch.mesh import describe, make_mesh_for
 from repro.models import transformer
 from repro.optim import adamw
+from repro.train.guards import GuardConfig, TrainGuard
 from repro.train.train_step import TrainConfig, make_train_step
 
 
@@ -169,6 +176,7 @@ def run(args):
         remat=remat,
         accum=args.accum,
         use_loss_scale=(args.policy == "fp16"),
+        skip_nonfinite=args.guard,
         opt=adamw.AdamWConfig(lr=args.lr, total_steps=args.steps,
                               warmup_steps=min(100, args.steps // 10 + 1)),
     )
@@ -189,7 +197,8 @@ def run(args):
         state_like = {"params": params, "opt": opt}
         (restored, extra) = mgr.restore(
             latest, state_like,
-            shardings={"params": shards["params"], "opt": shards["opt"]})
+            shardings={"params": shards["params"], "opt": shards["opt"]},
+            config=cfg.arch_id)
         params, opt = restored["params"], restored["opt"]
         start_step = extra.get("step", latest)
         data_state = extra.get("data_state", 0)
@@ -214,17 +223,74 @@ def run(args):
         mgr.save(step, {"params": params, "opt": opt},
                  extra={"step": step, "data_state": data_state,
                         "loss_scale": float(ls.scale),
-                        "arch": cfg.arch_id})
+                        "arch": cfg.arch_id},
+                 config=cfg.arch_id)
 
+    guard = None
+    if args.guard:
+        guard = TrainGuard(GuardConfig(
+            window=args.guard_window,
+            spike_factor=args.guard_spike_factor,
+            rollback_after=args.guard_rollback_after))
+        print(f"guard: skip non-finite steps in-jit; loss spike > "
+              f"{args.guard_spike_factor}x rolling median; "
+              f"{args.guard_rollback_after} consecutive bad steps -> "
+              f"rollback (costs one loss sync per step)")
     wd = Watchdog()
     data = synthetic_lm_batches(cfg, args.batch, args.seq, seed=args.seed,
                                 state=data_state)
     t0 = time.time()
+    step = start_step
     try:
-        for step in range(start_step, args.steps):
+        while step < args.steps:
             data_state, batch = next(data)
             wd.step_start()
             params, opt, ls, metrics = step_fn(params, opt, ls, batch)
+            verdict = TrainGuard.OK
+            if guard is not None:
+                verdict = guard.observe(float(metrics["loss"]),  # sync
+                                        bool(metrics["grads_finite"]))
+            if verdict == TrainGuard.ROLLBACK:
+                wd.step_end()
+                if guard.rollbacks > args.guard_max_rollbacks:
+                    print(f"[guard] {guard.rollbacks} rollbacks exceed "
+                          f"--guard-max-rollbacks="
+                          f"{args.guard_max_rollbacks} — persistent "
+                          f"fault, aborting ({guard.counters()})")
+                    return 1
+                latest = mgr.latest_step()
+                if latest is None:
+                    print("[guard] rollback with no checkpoint on disk — "
+                          "restarting from init")
+                    params = jax.device_put(
+                        transformer.init_params(
+                            cfg, jax.random.PRNGKey(args.seed)),
+                        shards["params"])
+                    opt = jax.device_put(adamw.init(params), shards["opt"])
+                    step, data_state = 0, 0
+                else:
+                    restored, extra = mgr.restore(
+                        latest, {"params": params, "opt": opt},
+                        shardings={"params": shards["params"],
+                                   "opt": shards["opt"]},
+                        config=cfg.arch_id)
+                    params, opt = restored["params"], restored["opt"]
+                    step = extra.get("step", latest)
+                    data_state = extra.get("data_state", 0)
+                    if tc.use_loss_scale and "loss_scale" in extra:
+                        ls = dataclasses.replace(
+                            ls, scale=jnp.float32(extra["loss_scale"]))
+                guard.reset_history()
+                data = synthetic_lm_batches(cfg, args.batch, args.seq,
+                                            seed=args.seed,
+                                            state=data_state)
+                print(f"[guard] rolled back to step {step} "
+                      f"(data batch {data_state}; {guard.counters()})")
+                continue
+            if verdict == TrainGuard.SKIP:
+                print(f"[guard] step {step}: bad step "
+                      f"({guard.counters()}) — update "
+                      f"{'suppressed in-jit' if not bool(metrics['grads_finite']) else 'applied; loss quarantined'}")
             if step % args.log_every == 0 or step == args.steps - 1:
                 loss = float(metrics["loss"])  # sync point
                 print(f"step {step:5d} loss {loss:.4f} "
@@ -233,16 +299,23 @@ def run(args):
                       f"({(time.time()-t0):.1f}s)")
             wd.step_end()
             data_state += 1
-            if (step + 1) % args.ckpt_every == 0:
-                save(step + 1)
+            step += 1
+            healthy = guard is None or guard.bad_streak == 0
+            if step % args.ckpt_every == 0 and healthy:
+                # never checkpoint mid-bad-streak: the rollback target
+                # must be a GOOD state
+                save(step)
             if stop["now"]:
-                save(step + 1)
+                if healthy:
+                    save(step)
                 return 0
         save(args.steps)
     finally:
         wd.close()
         for s, h in zip((signal.SIGTERM, signal.SIGINT), old_handlers):
             signal.signal(s, h)
+    if guard is not None:
+        print(f"guard: {guard.counters()}")
     print("done")
     return 0
 
@@ -286,6 +359,20 @@ def main():
     ap.add_argument("--log-every", type=int, default=10)
     ap.add_argument("--max-model", type=int, default=16)
     ap.add_argument("--fresh", action="store_true")
+    ap.add_argument("--guard", action="store_true",
+                    help="enable train/guards.py: skip NaN/Inf-grad "
+                         "updates in-jit, detect loss spikes against a "
+                         "rolling median, roll back to the last good "
+                         "checkpoint after consecutive bad steps")
+    ap.add_argument("--guard-window", type=int, default=32,
+                    help="guard: healthy-loss history for the median")
+    ap.add_argument("--guard-spike-factor", type=float, default=4.0,
+                    help="guard: loss > factor x median => spike")
+    ap.add_argument("--guard-rollback-after", type=int, default=3,
+                    help="guard: consecutive bad steps before rollback")
+    ap.add_argument("--guard-max-rollbacks", type=int, default=5,
+                    help="guard: abort (exit 1) past this many rollbacks "
+                         "— a persistent fault, not a transient")
     return run(ap.parse_args())
 
 

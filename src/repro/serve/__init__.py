@@ -1,17 +1,23 @@
 """Continuous-batching serve engine: slot-pooled int8 KV cache, FCFS
-scheduler, and a recompile-free join/evict step loop.  See README.md in
-this package for the architecture and the static-shape contract."""
+scheduler, recompile-free join/evict step loop, and the fault-tolerance
+layer (deadlines, cancellation, quarantine + replay).  See README.md in
+this package for the architecture, the static-shape contract, and the
+failure semantics."""
 from repro.serve.cache_pool import SlotPool, scatter_request
 from repro.serve.engine import ServeEngine, default_buckets, supports
+from repro.serve.faults import FaultEvent, FaultInjector, FaultPlan
 from repro.serve.metrics import ServeMetrics
 from repro.serve.sampling import make_sampler, sample_tokens
-from repro.serve.scheduler import (DECODE, DONE, PREFILL, QUEUED, Request,
-                                   Scheduler)
+from repro.serve.scheduler import (CANCELLED, DECODE, DONE, DROPPED, FAILED,
+                                   PREFILL, QUEUED, TERMINAL,
+                                   AdmissionRejected, Request, Scheduler)
 from repro.serve.trace import TraceRequest, synthetic_trace
 
 __all__ = [
     "ServeEngine", "SlotPool", "Scheduler", "Request", "ServeMetrics",
     "TraceRequest", "synthetic_trace", "scatter_request", "sample_tokens",
     "make_sampler", "default_buckets", "supports",
+    "FaultPlan", "FaultEvent", "FaultInjector", "AdmissionRejected",
     "QUEUED", "PREFILL", "DECODE", "DONE",
+    "CANCELLED", "DROPPED", "FAILED", "TERMINAL",
 ]

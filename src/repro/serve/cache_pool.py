@@ -88,8 +88,10 @@ class SlotPool:
                 self.cache, shd.to_shardings(mesh, self.specs))
         self._free = list(range(max_slots - 1, -1, -1))   # pop() -> slot 0 first
         self._live: set[int] = set()
+        self._quarantined: set[int] = set()
         self.allocs = 0
         self.frees = 0
+        self.quarantines = 0
 
     # -- host-side lifetime management ------------------------------------
     @property
@@ -99,6 +101,10 @@ class SlotPool:
     @property
     def occupancy(self) -> int:
         return len(self._live)
+
+    @property
+    def quarantined(self) -> int:
+        return len(self._quarantined)
 
     def alloc(self) -> int | None:
         """Claim a free slot id, or None when the pool is full."""
@@ -116,6 +122,64 @@ class SlotPool:
         self._live.remove(slot)
         self._free.append(slot)
         self.frees += 1
+
+    # -- fault quarantine --------------------------------------------------
+    def quarantine(self, slot: int) -> None:
+        """Pull a poisoned live slot OUT of circulation: it is neither
+        live (its request is gone) nor free (it must not be handed to a
+        new request until the engine has audited the pool).  Release via
+        :meth:`release_quarantined` — that is when the matching ``free``
+        is counted, so ``allocs == frees`` still holds once a drained
+        pool has released its quarantine."""
+        if slot not in self._live:
+            raise ValueError(f"SlotPool.quarantine: slot {slot} is not "
+                             f"live")
+        self._live.remove(slot)
+        self._quarantined.add(slot)
+        self.quarantines += 1
+
+    def release_quarantined(self) -> list[int]:
+        """Return quarantined slots to the free list (their bytes are
+        dead by contract — the next ``scatter_request`` fully overwrites
+        a slot's rows and re-stamps its length).  Call after
+        :meth:`audit` passes."""
+        released = sorted(self._quarantined)
+        for slot in released:
+            self._quarantined.remove(slot)
+            self._free.append(slot)
+            self.frees += 1
+        return released
+
+    def audit(self) -> dict:
+        """Verify the pool's alloc/free invariant; raise on corruption.
+
+        Checks: the free / live / quarantined sets partition the slot
+        space exactly, and the alloc/free counters reconcile with what
+        is currently outstanding.  Returns the accounting snapshot the
+        engine attaches to its diagnostics."""
+        free = set(self._free)
+        report = {"free": len(free), "live": len(self._live),
+                  "quarantined": len(self._quarantined),
+                  "allocs": self.allocs, "frees": self.frees}
+        if len(free) != len(self._free):
+            raise RuntimeError(f"SlotPool.audit: duplicate slots on the "
+                               f"free list ({sorted(self._free)})")
+        overlap = (free & self._live) | (free & self._quarantined) \
+            | (self._live & self._quarantined)
+        if overlap:
+            raise RuntimeError(f"SlotPool.audit: slots in two states: "
+                               f"{sorted(overlap)}")
+        missing = set(range(self.max_slots)) - free - self._live \
+            - self._quarantined
+        if missing:
+            raise RuntimeError(f"SlotPool.audit: slots leaked out of all "
+                               f"states: {sorted(missing)}")
+        outstanding = len(self._live) + len(self._quarantined)
+        if self.allocs - self.frees != outstanding:
+            raise RuntimeError(
+                f"SlotPool.audit: allocs({self.allocs}) - "
+                f"frees({self.frees}) != live+quarantined({outstanding})")
+        return report
 
     # -- accounting --------------------------------------------------------
     def bytes_per_slot(self) -> int:

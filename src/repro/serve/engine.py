@@ -1,6 +1,7 @@
 """Continuous-batching serve engine over the prefill/decode steps.
 
-One engine step = (bounded) admissions + one decode round:
+One engine step = deadline shedding + (bounded) admissions + one decode
+round:
 
 * admission: FCFS requests claim a pool slot, prefill at a static prompt
   BUCKET (padded; the bucket's suffix positions never contaminate the
@@ -18,11 +19,39 @@ One engine step = (bounded) admissions + one decode round:
 Retirement (EOS or max-new-tokens) frees the slot back to the pool; the
 row's stale bytes are simply never read again and are fully overwritten
 by the next scatter.
+
+Fault tolerance (ISSUE 7) — detect, degrade, recover:
+
+* a health sentinel is FUSED into the jitted decode program: per slot,
+  all-finite logits AND sampled-token-in-vocab AND a scattered prompt
+  (``pos > 0``).  The verdict rides IN the fetched token value (a
+  tripped slot yields -1; no vocab id is negative), so the steady-state
+  path fetches the same single ``(max_slots,)`` int32 it always did —
+  no extra host sync, no recompile (asserted via ``compile_counts``);
+* a tripped sentinel quarantines the poisoned slot
+  (``SlotPool.quarantine``), audits the pool's alloc/free invariant
+  (``SlotPool.audit``), and releases the slot only after the audit
+  passes — the next scatter fully overwrites the row;
+* the victim request replays deterministically from its prompt plus the
+  already-emitted (healthy) tokens: it re-enters the queue at the HEAD
+  with a retry backoff, re-prefills over the extended prompt, and keeps
+  generating.  A bounded per-request retry budget (``max_retries``)
+  escalates persistent faults to ``FAILED``;
+* per-request deadlines (queue TTL) shed stale queued requests to
+  ``DROPPED``; a bounded queue rejects submits (``AdmissionRejected``);
+  ``cancel`` and ``drain`` give callers explicit control; ``run`` on a
+  stuck trace returns a partial summary flagged ``stalled`` instead of
+  discarding every metric in a raise.
+
+``hooks`` is the seam the fault-injection harness (``serve/faults.py``)
+uses: optional host-side callables consulted around the jit boundaries
+("pre_step", "pre_decode", "scatter_filter") — they never touch compiled
+programs, so injection cannot recompile anything.
 """
 from __future__ import annotations
 
 import functools
-from typing import Optional, Sequence
+from typing import Callable, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -34,7 +63,9 @@ from repro.models.config import ModelConfig
 from repro.serve import sampling
 from repro.serve.cache_pool import SlotPool, scatter_request
 from repro.serve.metrics import ServeMetrics
-from repro.serve.scheduler import DECODE, Request, Scheduler
+from repro.serve.scheduler import (CANCELLED, DECODE, FAILED, QUEUED,
+                                   TERMINAL, AdmissionRejected, Request,
+                                   Scheduler)
 from repro.serve.trace import TraceRequest
 
 
@@ -65,19 +96,31 @@ class ServeEngine:
                  temperature: float = 0.0, top_k: int = 0, seed: int = 0,
                  eos_id: Optional[int] = None,
                  max_prefill_per_step: int = 1,
-                 mem_budget_bytes: Optional[int] = None, mesh=None):
+                 mem_budget_bytes: Optional[int] = None, mesh=None,
+                 max_queue: Optional[int] = None,
+                 deadline_steps: Optional[int] = None,
+                 max_retries: int = 2, retry_backoff_steps: int = 1):
         if not supports(cfg):
             raise NotImplementedError(
                 "ServeEngine needs a GQA attention arch with a uniform "
                 "window schedule (no MLA latents, SSM state, encoder "
                 "cross-attention, or per-layer global overrides) — those "
                 "serve through the lockstep driver")
+        if max_retries < 0 or retry_backoff_steps < 0:
+            raise ValueError("ServeEngine: max_retries and "
+                             "retry_backoff_steps must be >= 0")
         self.cfg = cfg
         self.mesh = mesh
         self.max_len = max_len
         self.quantized = quantized
         self.eos_id = eos_id
+        self.deadline_steps = deadline_steps
+        self.max_retries = max_retries
+        self.retry_backoff_steps = retry_backoff_steps
         self.temperature, self.top_k = float(temperature), int(top_k)
+        #: host-side interception points around the jit boundaries (the
+        #: fault-injection seam; see module docstring) — never compiled
+        self.hooks: dict[str, Callable] = {}
         self.capacity_report = None
         if mem_budget_bytes is not None:
             from repro import plan as plan_mod
@@ -105,7 +148,7 @@ class ServeEngine:
         self.scheduler = Scheduler(
             max_slots, bytes_per_slot=self.pool.bytes_per_slot_per_device(),
             byte_budget=mem_budget_bytes,
-            max_prefill_per_step=max_prefill_per_step)
+            max_prefill_per_step=max_prefill_per_step, max_queue=max_queue)
         self.metrics = ServeMetrics()
         self.buckets = tuple(sorted(prompt_buckets
                                     if prompt_buckets is not None
@@ -120,13 +163,30 @@ class ServeEngine:
             # sampling is FUSED into the decode program: one dispatch per
             # engine step, and the token/active buffers never round-trip
             # through the host on the steady-state path
+            pos_before = cache["pos"]
             logits, cache = transformer.decode_step(
                 params, cfg, cache, tokens, policy=policy,
                 quantized=quantized, kvq_backend=kv_backend,
                 kvq_splits=kv_splits, active=active, mesh=mesh)
             sampled = sampling.sample_tokens(
                 logits, key, temperature=self.temperature, top_k=self.top_k)
-            return jnp.where(active, sampled, tokens), cache
+            # health sentinel, fused into the same program: a live slot is
+            # healthy iff its logits are all finite (the padded-vocab mask
+            # is a finite -1e30 by design), its sampled token is a real
+            # vocab id, and a prompt was actually scattered into the row
+            # (pos > 0 pre-increment — a dropped scatter leaves 0).  The
+            # verdict rides IN the token value: a tripped slot yields -1
+            # (no vocab id is negative), so the steady-state path still
+            # fetches exactly one (max_slots,) int32 — no second device
+            # array, no extra host sync, no recompile.  A faulted slot's
+            # -1 never feeds a real decode: the engine deactivates the
+            # slot before its next step and re-joins it with a fresh
+            # token.
+            healthy = (jnp.isfinite(logits).all(axis=-1)
+                       & (sampled >= 0) & (sampled < cfg.vocab)
+                       & (pos_before > 0))
+            return jnp.where(active & healthy, sampled,
+                             jnp.where(active, jnp.int32(-1), tokens)), cache
 
         def _prefill(bucket, params, tokens, true_len):
             # mesh: _kv_entry pins each cache entry's sharding as it is
@@ -204,7 +264,9 @@ class ServeEngine:
         self._draws = 0
         self._step_no = 0
         self._next_rid = 0
+        self._draining = False
         self._slot_req: dict[int, Request] = {}
+        self._requests: dict[int, Request] = {}            # every rid ever
         self._requests_done: list[Request] = []
         self._tokens_dev = self._replicated(jnp.zeros((max_slots,), jnp.int32))
         self._active_dev = self._replicated(jnp.zeros((max_slots,), bool))
@@ -217,14 +279,24 @@ class ServeEngine:
 
     def submit(self, prompt, max_new_tokens: int,
                eos_id: Optional[int] = None,
-               arrival_step: Optional[int] = None) -> int:
-        """Queue a request; returns its rid.  FCFS from here on."""
+               arrival_step: Optional[int] = None,
+               deadline_steps: Optional[int] = None) -> int:
+        """Queue a request; returns its rid.  FCFS from here on.
+
+        Raises :class:`AdmissionRejected` when the bounded queue is full
+        (backpressure — the request never entered the system).
+        ``deadline_steps`` is a queue TTL in engine steps (None falls
+        back to the engine default): a request still queued past it is
+        shed to ``DROPPED`` instead of waiting forever."""
         prompt = np.asarray(prompt, np.int32)
         req = Request(rid=self._next_rid, prompt=prompt,
                       max_new_tokens=max_new_tokens,
                       arrival_step=(self._step_no if arrival_step is None
                                     else arrival_step),
-                      eos_id=eos_id if eos_id is not None else self.eos_id)
+                      eos_id=eos_id if eos_id is not None else self.eos_id,
+                      deadline_steps=(deadline_steps
+                                      if deadline_steps is not None
+                                      else self.deadline_steps))
         if req.prompt_len > self.buckets[-1]:
             raise ValueError(f"request {req.rid}: prompt_len "
                              f"{req.prompt_len} exceeds largest bucket "
@@ -233,10 +305,60 @@ class ServeEngine:
             raise ValueError(f"request {req.rid}: prompt+gen "
                              f"{req.total_len()} exceeds max_len "
                              f"{self.max_len}")
+        try:
+            self.scheduler.submit(req)
+        except AdmissionRejected:
+            self.metrics.on_reject()
+            raise
         self._next_rid += 1
-        self.scheduler.submit(req)
+        self._requests[req.rid] = req
         self.metrics.on_submit(req.rid, self._step_no)
         return req.rid
+
+    def cancel(self, rid: int) -> bool:
+        """Cancel a queued or resident request.  Returns True if it was
+        cancelled, False if unknown or already terminal.  A resident
+        request's slot goes straight back to the pool (its cache bytes
+        are dead by contract; the next scatter overwrites them)."""
+        req = self._requests.get(rid)
+        if req is None or req.state in TERMINAL:
+            return False
+        if req.state == QUEUED:
+            self.scheduler.cancel_queued(req)
+        else:
+            self.scheduler.retire(req, state=CANCELLED)
+            self._evict(req)
+        self.metrics.on_terminal(rid, CANCELLED)
+        return True
+
+    def drain(self, *, cancel_queued: bool = True,
+              max_steps: Optional[int] = None) -> dict:
+        """Graceful shutdown: admit nothing new, let resident requests
+        finish, and return the final summary.  Queued requests are
+        cancelled by default (with ``cancel_queued=False`` they stay
+        queued for a later ``run``/``step``)."""
+        if cancel_queued:
+            for req in list(self._requests.values()):
+                if req.state == QUEUED:
+                    self.cancel(req.rid)
+        self._draining = True
+        try:
+            budget = max_steps if max_steps is not None else \
+                8 * (self.max_len + 1) * max(1, self.scheduler.resident)
+            while self.scheduler.resident > 0:
+                self.step()
+                budget -= 1
+                if budget < 0:
+                    return self.summary(stalled=True)
+        finally:
+            self._draining = False
+        if cancel_queued:
+            # a fault mid-drain can requeue a replay; it can't be admitted
+            # while draining, so cancel it rather than strand it
+            for req in list(self._requests.values()):
+                if req.state == QUEUED:
+                    self.cancel(req.rid)
+        return self.summary()
 
     def decode_hlo(self) -> str:
         """Compiled-HLO text of the decode round, at the live buffers'
@@ -294,12 +416,15 @@ class ServeEngine:
             self.pool.max_slots,
             bytes_per_slot=self.pool.bytes_per_slot_per_device(),
             byte_budget=self.scheduler.byte_budget,
-            max_prefill_per_step=self.scheduler.max_prefill_per_step)
+            max_prefill_per_step=self.scheduler.max_prefill_per_step,
+            max_queue=self.scheduler.max_queue)
         self.metrics = ServeMetrics()
         self._draws = 0
         self._step_no = 0
         self._next_rid = 0
+        self._draining = False
         self._slot_req.clear()
+        self._requests.clear()
         self._requests_done.clear()
         self._tokens_dev = self._replicated(
             jnp.zeros((self.pool.max_slots,), jnp.int32))
@@ -326,6 +451,17 @@ class ServeEngine:
         self._draws += 1
         return k
 
+    def _evict(self, req: Request) -> None:
+        """Release a resident request's slot + device state (terminal
+        transitions and replays share this; the scheduler transition
+        happens at the caller)."""
+        self.pool.free(req.slot)
+        self._active_buf[req.slot] = False
+        self._active_dev = self._leave_fn(self._active_dev,
+                                          jnp.int32(req.slot))
+        del self._slot_req[req.slot]
+        req.slot = None
+
     def _emit(self, req: Request, tok: int) -> None:
         """Record one sampled token; retire the request when finished."""
         req.tokens.append(tok)
@@ -334,28 +470,81 @@ class ServeEngine:
         if hit_eos or len(req.tokens) >= req.max_new_tokens:
             self.scheduler.retire(req)
             self.metrics.on_done(req.rid)
-            self.pool.free(req.slot)
-            self._active_buf[req.slot] = False
-            self._active_dev = self._leave_fn(self._active_dev,
-                                              jnp.int32(req.slot))
-            del self._slot_req[req.slot]
+            self._evict(req)
             self._requests_done.append(req)
 
+    def _replay_prompt(self, req: Request) -> np.ndarray:
+        """Prompt + already-emitted (healthy) tokens: the deterministic
+        replay input.  Under greedy decode the continuation is
+        token-exact; under sampling it is seeded-deterministic (same
+        seed + same fault schedule -> same tokens)."""
+        if not req.tokens:
+            return req.prompt
+        return np.concatenate([req.prompt,
+                               np.asarray(req.tokens, np.int32)])
+
+    def _fault(self, req: Request) -> None:
+        """The decode sentinel tripped on ``req``'s slot: quarantine the
+        poisoned row, audit the pool, then replay or fail the victim.
+
+        The faulted step's sampled token is NEVER emitted — the client
+        only ever sees healthy tokens, which is what makes the replay
+        prefix exact."""
+        slot = req.slot
+        self.metrics.on_fault(req.rid)
+        self.pool.quarantine(slot)
+        self._active_buf[slot] = False
+        self._active_dev = self._leave_fn(self._active_dev, jnp.int32(slot))
+        del self._slot_req[slot]
+        req.slot = None
+        self.pool.audit()                 # alloc/free invariant still holds?
+        self.pool.release_quarantined()   # row is dead; next scatter overwrites
+
+        reason = None
+        if req.retries >= self.max_retries:
+            reason = (f"retry budget exhausted "
+                      f"({req.retries}/{self.max_retries})")
+        elif len(self._replay_prompt(req)) > self.buckets[-1]:
+            reason = (f"replay prompt {len(self._replay_prompt(req))} "
+                      f"exceeds largest bucket {self.buckets[-1]}")
+        if reason is not None:
+            self.scheduler.retire(req, state=FAILED)
+            req.fail_reason = reason
+            self.metrics.on_terminal(req.rid, FAILED)
+            return
+        req.retries += 1
+        # backoff: the replay waits retries * backoff steps at the head
+        # of the line before re-prefilling
+        self.scheduler.requeue(
+            req, self._step_no + 1 + self.retry_backoff_steps * req.retries)
+        self.metrics.on_retry(req.rid)
+
     def step(self) -> None:
-        """Admissions (bounded prefills) + one decode round."""
-        admitted = self.scheduler.pop_admissible(self.pool.free_slots,
-                                                 self._step_no)
+        """Deadline shedding + admissions (bounded prefills) + one decode
+        round with the fused health sentinel."""
+        hook = self.hooks.get("pre_step")
+        if hook is not None:
+            hook(self)
+        for req in self.scheduler.shed_expired(self._step_no):
+            self.metrics.on_terminal(req.rid, req.state)
+
+        admitted = [] if self._draining else \
+            self.scheduler.pop_admissible(self.pool.free_slots, self._step_no)
+        scatter_ok = self.hooks.get("scatter_filter")
         for req in admitted:
             slot = self.pool.alloc()
             assert slot is not None       # pop_admissible checked free_slots
-            b = self._bucket_for(req.prompt_len)
+            prompt = self._replay_prompt(req)   # == req.prompt first time
+            plen = len(prompt)
+            b = self._bucket_for(plen)
             padded = np.zeros((1, b), np.int32)
-            padded[0, :req.prompt_len] = req.prompt
+            padded[0, :plen] = prompt
             logits, req_cache = self._prefill_fns[b](
-                self.params, jnp.asarray(padded), jnp.int32(req.prompt_len))
-            self.pool.cache = self._scatter_fn(
-                self.pool.cache, req_cache, jnp.int32(slot),
-                jnp.int32(req.prompt_len))
+                self.params, jnp.asarray(padded), jnp.int32(plen))
+            if scatter_ok is None or scatter_ok(self, req, slot):
+                self.pool.cache = self._scatter_fn(
+                    self.pool.cache, req_cache, jnp.int32(slot),
+                    jnp.int32(plen))
             tok = int(np.asarray(self._sampler(logits, self._next_key()))[0])
             req.state = DECODE
             req.slot = slot
@@ -367,17 +556,45 @@ class ServeEngine:
             self._emit(req, tok)          # first token: the TTFT sample
 
         if self._active_buf.any():
+            hook = self.hooks.get("pre_decode")
+            if hook is not None:
+                hook(self)
             live = np.nonzero(self._active_buf)[0]      # snapshot pre-emit
             self._tokens_dev, self.pool.cache = self._decode_fn(
                 self.params, self.pool.cache, self._tokens_dev,
                 self._active_dev, self._next_key())
+            # one host sync, same as the fault-free path: the sentinel
+            # verdict is encoded in the token sign (-1 = tripped)
             toks = np.asarray(self._tokens_dev)
             for slot in live:
-                self._emit(self._slot_req[int(slot)], int(toks[slot]))
+                req = self._slot_req[int(slot)]
+                if toks[slot] >= 0:
+                    self._emit(req, int(toks[slot]))
+                else:
+                    self._fault(req)
 
         self.metrics.on_step(self._step_no, self.scheduler.queue_depth,
                              self.pool.occupancy)
         self._step_no += 1
+
+    def summary(self, *, stalled: bool = False) -> dict:
+        """Metrics summary + live scheduler/pool diagnostics.  Always
+        complete — a stalled run flags ``stalled=True`` instead of
+        throwing the metrics away."""
+        out = self.metrics.summary(max_slots=self.pool.max_slots)
+        out["stalled"] = stalled
+        out["diagnostics"] = {
+            "step_no": self._step_no,
+            "queue_depth": self.scheduler.queue_depth,
+            "resident": self.scheduler.resident,
+            "state_counts": self.scheduler.state_counts(),
+            "pool": {"occupancy": self.pool.occupancy,
+                     "free": self.pool.free_slots,
+                     "quarantined": self.pool.quarantined,
+                     "allocs": self.pool.allocs, "frees": self.pool.frees,
+                     "quarantines": self.pool.quarantines},
+        }
+        return out
 
     def run(self, trace: Sequence[TraceRequest], *,
             max_steps: Optional[int] = None) -> dict:
@@ -385,18 +602,26 @@ class ServeEngine:
 
         Arrivals are step-indexed: a request is submitted once the engine
         reaches its ``arrival_step``; idle gaps (empty pool, nothing
-        arrived) fast-forward instead of burning decode rounds.
+        arrived) fast-forward instead of burning decode rounds.  Trace
+        submits hitting a full bounded queue are REJECTED (counted in
+        the summary), and a run that exceeds its step budget returns a
+        partial summary flagged ``stalled`` with scheduler/pool
+        diagnostics instead of raising away every metric.
         """
         pending = sorted(trace, key=lambda r: r.arrival_step)
         i = 0
         budget = max_steps if max_steps is not None else (
-            sum(r.max_new_tokens + 2 for r in pending)
+            sum((r.max_new_tokens + 2) * (self.max_retries + 1)
+                for r in pending)
             + (pending[-1].arrival_step if pending else 0) + 16)
         while i < len(pending) or self.scheduler.has_work():
             while (i < len(pending)
                    and pending[i].arrival_step <= self._step_no):
                 r = pending[i]
-                self.submit(r.prompt, r.max_new_tokens)
+                try:
+                    self.submit(r.prompt, r.max_new_tokens)
+                except AdmissionRejected:
+                    pass                  # backpressure: counted, shed
                 i += 1
             if not self.scheduler.has_work() and i < len(pending):
                 self._step_no = pending[i].arrival_step   # fast-forward idle
@@ -404,6 +629,5 @@ class ServeEngine:
             self.step()
             budget -= 1
             if budget < 0:
-                raise RuntimeError("ServeEngine.run exceeded its step "
-                                   "budget — scheduler stuck?")
-        return self.metrics.summary(max_slots=self.pool.max_slots)
+                return self.summary(stalled=True)
+        return self.summary()

@@ -1,0 +1,189 @@
+"""Seeded fault injection for the serve engine — the proof harness for
+the detect → quarantine → recover path.
+
+A :class:`FaultPlan` is a deterministic schedule of :class:`FaultEvent`\\ s
+keyed by engine step; a :class:`FaultInjector` installs itself into
+``ServeEngine.hooks`` and fires the events as the engine crosses each
+step.  Everything here is HOST-side: injection pokes the pool cache's
+arrays between dispatches or filters a scatter call — it never wraps or
+retraces a compiled program, so ``compile_counts()`` stays frozen under
+injection (asserted in tests).
+
+Fault kinds and what they exercise:
+
+``nan_logits``
+    NaN the victim slot's cache scale rows (or raw K/V rows on an
+    unquantized pool) → the next decode's logits for that slot are NaN →
+    the all-finite sentinel trips.  Per-slot attention means ONLY the
+    poisoned slot trips; neighbors keep decoding.
+``corrupt_row``
+    Overwrite the rows with ``3.4e38`` → the attention matmul overflows
+    to inf → non-finite logits.  Same detection path, different poison —
+    models a corrupted (not merely NaN'd) cache row.
+``drop_scatter``
+    Suppress the admission-time ``scatter_request`` call via the
+    ``scatter_filter`` hook → the slot's ``pos`` stays 0 → the
+    sentinel's scattered-prompt check (``pos > 0``) trips on the first
+    decode round.
+``cancel``
+    Call ``engine.cancel(rid)`` at the scheduled step (queued or
+    resident) — cancellation storms.
+
+Recovery contract (what the tests assert): the quarantined slot passes a
+pool audit and returns to the free list; the victim replays from prompt
++ already-emitted tokens, so a surviving request's final token stream is
+exactly the fault-free greedy stream; drained pools show zero slot leaks
+(``allocs == frees``, occupancy 0).
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import Counter
+from typing import Iterable, Optional
+
+import jax.numpy as jnp
+
+KINDS = ("nan_logits", "corrupt_row", "drop_scatter", "cancel")
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultEvent:
+    """One scheduled fault.  ``step`` is the engine step it fires at;
+    the victim is named by ``rid`` (preferred — slots get recycled) or a
+    raw ``slot``; ``drop_scatter`` with neither hits every admission at
+    that step."""
+    step: int
+    kind: str
+    rid: Optional[int] = None
+    slot: Optional[int] = None
+
+    def __post_init__(self):
+        if self.kind not in KINDS:
+            raise ValueError(f"FaultEvent: unknown kind {self.kind!r} "
+                             f"(expected one of {KINDS})")
+        if self.step < 0:
+            raise ValueError("FaultEvent: step must be >= 0")
+        if self.kind == "cancel" and self.rid is None:
+            raise ValueError("FaultEvent: cancel needs a rid")
+
+
+class FaultPlan:
+    """A deterministic, step-keyed schedule of faults.
+
+    Build with the fluent helpers::
+
+        plan = (FaultPlan()
+                .nan_logits(step=4, rid=0)
+                .corrupt_row(step=9, rid=2)
+                .drop_scatter(step=2)
+                .cancel(step=6, rid=3))
+    """
+
+    def __init__(self, events: Iterable[FaultEvent] = ()):
+        self.events: list[FaultEvent] = list(events)
+
+    def add(self, step: int, kind: str, *, rid: Optional[int] = None,
+            slot: Optional[int] = None) -> "FaultPlan":
+        self.events.append(FaultEvent(step=step, kind=kind, rid=rid,
+                                      slot=slot))
+        return self
+
+    def nan_logits(self, step: int, *, rid: Optional[int] = None,
+                   slot: Optional[int] = None) -> "FaultPlan":
+        return self.add(step, "nan_logits", rid=rid, slot=slot)
+
+    def corrupt_row(self, step: int, *, rid: Optional[int] = None,
+                    slot: Optional[int] = None) -> "FaultPlan":
+        return self.add(step, "corrupt_row", rid=rid, slot=slot)
+
+    def drop_scatter(self, step: int,
+                     rid: Optional[int] = None) -> "FaultPlan":
+        return self.add(step, "drop_scatter", rid=rid)
+
+    def cancel(self, step: int, rid: int) -> "FaultPlan":
+        return self.add(step, "cancel", rid=rid)
+
+    def at(self, step: int, kind: Optional[str] = None) -> list[FaultEvent]:
+        return [e for e in self.events
+                if e.step == step and (kind is None or e.kind == kind)]
+
+    def counts(self) -> Counter:
+        return Counter(e.kind for e in self.events)
+
+    def __len__(self) -> int:
+        return len(self.events)
+
+
+class FaultInjector:
+    """Wires a :class:`FaultPlan` into an engine's host-side hooks.
+
+    ``injected`` counts the faults that actually LANDED (a nan_logits
+    aimed at a request that already finished lands nowhere), and
+    ``victims`` records the rids hit by cache poison / dropped scatters —
+    tests reconcile both against the engine summary.
+    """
+
+    def __init__(self, engine, plan: FaultPlan):
+        self.engine = engine
+        self.plan = plan
+        self.injected: Counter = Counter()
+        self.victims: set[int] = set()
+        engine.hooks["pre_step"] = self._pre_step
+        engine.hooks["pre_decode"] = self._pre_decode
+        engine.hooks["scatter_filter"] = self._scatter_filter
+
+    def uninstall(self) -> None:
+        for name in ("pre_step", "pre_decode", "scatter_filter"):
+            self.engine.hooks.pop(name, None)
+
+    # -- hook bodies ---------------------------------------------------------
+    def _pre_step(self, engine) -> None:
+        for e in self.plan.at(engine.step_no, "cancel"):
+            if engine.cancel(e.rid):
+                self.injected["cancel"] += 1
+
+    def _resolve_slot(self, e: FaultEvent) -> Optional[int]:
+        """Victim slot for a cache-poison event, or None if it has no
+        resident target right now (request finished / not yet admitted)."""
+        if e.rid is not None:
+            req = self.engine._requests.get(e.rid)
+            return req.slot if req is not None else None
+        if e.slot is not None and e.slot in self.engine._slot_req:
+            return e.slot
+        return None
+
+    def _poison(self, slot: int, value: float) -> None:
+        """Overwrite one slot's cache rows host-side.  Shapes and dtypes
+        are unchanged (``.at[].set`` on the existing leaves), so the
+        donated-buffer decode program is reused as-is — injection cannot
+        recompile anything."""
+        cache = self.engine.pool.cache
+        names = [n for n in ("k_scale", "v_scale") if n in cache]
+        if not names:                       # unquantized pool: raw K/V rows
+            names = [n for n in ("k", "v") if n in cache]
+        for n in names:
+            # every leaf is (L, B, ...) with the slot axis at B
+            cache[n] = cache[n].at[:, slot].set(
+                jnp.asarray(value, cache[n].dtype))
+
+    def _pre_decode(self, engine) -> None:
+        for e in self.plan.at(engine.step_no, "nan_logits"):
+            slot = self._resolve_slot(e)
+            if slot is not None:
+                self._poison(slot, float("nan"))
+                self.injected["nan_logits"] += 1
+                self.victims.add(engine._slot_req[slot].rid)
+        for e in self.plan.at(engine.step_no, "corrupt_row"):
+            slot = self._resolve_slot(e)
+            if slot is not None:
+                self._poison(slot, 3.4e38)
+                self.injected["corrupt_row"] += 1
+                self.victims.add(engine._slot_req[slot].rid)
+
+    def _scatter_filter(self, engine, req, slot) -> bool:
+        for e in self.plan.at(engine.step_no, "drop_scatter"):
+            if e.rid is None or e.rid == req.rid:
+                self.injected["drop_scatter"] += 1
+                self.victims.add(req.rid)
+                return False
+        return True

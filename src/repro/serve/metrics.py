@@ -1,17 +1,26 @@
-"""Serving observability: TTFT, inter-token latency, throughput, queue
-depth, and slot occupancy.
+"""Serving observability: TTFT, inter-token latency, throughput, goodput,
+queue depth, slot occupancy, and failure-path counters.
 
 Latencies are wall-clock (``time.perf_counter``); scheduling quantities
 (queue depth, occupancy) are sampled once per engine step, so their means
 are per-step averages.  TTFT for a request counts from the moment the
 engine first SEES it (submit) to its first sampled token — queueing delay
 included, which is the honest serving number.
+
+Throughput vs goodput: ``total_tokens``/``tokens_per_s`` count every
+emitted token, including tokens from requests that were later cancelled,
+dropped, or failed; ``goodput_tokens``/``goodput_tokens_per_s`` count
+only tokens of requests that reached ``DONE`` — the number a client
+actually got value from.  Under faults the gap between the two is the
+cost of the failure paths.
 """
 from __future__ import annotations
 
 import dataclasses
 import time
 from typing import Optional
+
+from repro.serve.scheduler import CANCELLED, DONE, DROPPED, FAILED
 
 
 @dataclasses.dataclass
@@ -25,6 +34,9 @@ class _ReqStats:
     n_tokens: int = 0
     itl_sum: float = 0.0
     itl_n: int = 0
+    terminal: Optional[str] = None        # DONE/CANCELLED/DROPPED/FAILED
+    retries: int = 0
+    faults: int = 0
 
 
 def _mean(xs):
@@ -41,7 +53,7 @@ def _percentile(xs, q):
 
 
 class ServeMetrics:
-    """Per-request latency accounting + per-step gauges."""
+    """Per-request latency accounting + per-step gauges + fault counters."""
 
     def __init__(self, clock=time.perf_counter):
         self._clock = clock
@@ -49,6 +61,9 @@ class ServeMetrics:
         self._gauges: list[tuple[int, int, int]] = []  # (step, queue, occ)
         self._t0: Optional[float] = None
         self._t_end: Optional[float] = None
+        self.rejected = 0                  # bounded-queue backpressure
+        self.faults = 0                    # decode sentinel trips
+        self.retries = 0                   # replays scheduled
 
     def now(self) -> float:
         return self._clock()
@@ -73,7 +88,27 @@ class ServeMetrics:
         self._t_end = t
 
     def on_done(self, rid: int) -> None:
-        self._reqs[rid].t_done = self.now()
+        r = self._reqs[rid]
+        r.t_done = self.now()
+        r.terminal = DONE
+
+    def on_terminal(self, rid: int, state: str) -> None:
+        """A request left the system without finishing (CANCELLED /
+        DROPPED / FAILED)."""
+        r = self._reqs[rid]
+        r.t_done = self.now()
+        r.terminal = state
+
+    def on_reject(self) -> None:
+        self.rejected += 1
+
+    def on_fault(self, rid: int) -> None:
+        self.faults += 1
+        self._reqs[rid].faults += 1
+
+    def on_retry(self, rid: int) -> None:
+        self.retries += 1
+        self._reqs[rid].retries += 1
 
     # -- per-step gauges ---------------------------------------------------
     def on_step(self, step: int, queue_depth: int, occupancy: int) -> None:
@@ -81,21 +116,40 @@ class ServeMetrics:
 
     # -- aggregation -------------------------------------------------------
     def summary(self, *, max_slots: int = 0) -> dict:
-        done = [r for r in self._reqs.values() if r.t_done is not None]
+        done = [r for r in self._reqs.values() if r.terminal == DONE]
         ttfts = [r.t_first - r.t_submit for r in done if r.t_first is not None]
         ttft_steps = [r.first_step - r.submit_step for r in done
                       if r.first_step is not None]
         itls = [r.itl_sum / r.itl_n for r in done if r.itl_n]
         total_tokens = sum(r.n_tokens for r in self._reqs.values())
+        goodput_tokens = sum(r.n_tokens for r in done)
         wall = ((self._t_end - self._t0)
                 if self._t0 is not None and self._t_end is not None else 0.0)
         occ = [o for (_, _, o) in self._gauges]
+        by_terminal = {s: sum(1 for r in self._reqs.values()
+                              if r.terminal == s)
+                       for s in (CANCELLED, DROPPED, FAILED)}
+        retried = [r for r in self._reqs.values() if r.retries]
         out = {
             "n_requests": len(self._reqs),
             "n_done": len(done),
+            "n_cancelled": by_terminal[CANCELLED],
+            "n_dropped": by_terminal[DROPPED],
+            "n_failed": by_terminal[FAILED],
+            "n_rejected": self.rejected,
+            "n_faults": self.faults,
+            "n_retried": self.retries,
+            # of the requests that needed at least one replay, how many
+            # still finished — the replay path's success rate
+            "retry_success_rate": (
+                sum(1 for r in retried if r.terminal == DONE) / len(retried)
+                if retried else 1.0),
             "total_tokens": total_tokens,
+            "goodput_tokens": goodput_tokens,
             "wall_s": wall,
             "tokens_per_s": total_tokens / wall if wall > 0 else 0.0,
+            "goodput_tokens_per_s": (goodput_tokens / wall
+                                     if wall > 0 else 0.0),
             "ttft_mean_s": _mean(ttfts),
             "ttft_p50_s": _percentile(ttfts, 0.5),
             "ttft_p95_s": _percentile(ttfts, 0.95),

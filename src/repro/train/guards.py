@@ -1,0 +1,105 @@
+"""Training fault guards: NaN/Inf grad sentinel + rolling-median
+loss-spike detection with escalating skip-step → rollback.
+
+Detection is two-tier, matching where each fault is cheapest to catch:
+
+* **non-finite grads** are caught IN-JIT: ``core.mixed_precision``'s
+  all-finite tree check already rides every train step (it drives fp16
+  loss scaling), and ``adamw.update(skip=...)`` zeroes the update when
+  it trips — ``TrainConfig.skip_nonfinite`` turns that on outside the
+  fp16 path.  The guard only *counts* these (via the step's
+  ``grads_finite`` metric) and escalates;
+* **loss spikes** are caught HOST-side after the step, by comparing the
+  step loss against a rolling median of recent *healthy* losses
+  (HomebrewNLP-Jax's wandblog idiom: median, not mean — one spike must
+  not drag the baseline up).  A spiked step's params are already
+  updated; the guard quarantines the loss out of the history and
+  escalates instead of pretending it can un-apply the update.
+
+Escalation: each bad step (non-finite or spike) grows ``bad_streak``;
+an isolated bad step is **skipped** (logged, excluded from history),
+``rollback_after`` consecutive bad steps return ``ROLLBACK`` — the
+driver restores the last good checkpoint via ``CheckpointManager`` and
+replays from there (``launch/train.py --guard``).  Healthy steps reset
+the streak.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+import statistics
+from collections import deque
+
+
+@dataclasses.dataclass(frozen=True)
+class GuardConfig:
+    window: int = 32          # healthy losses kept for the rolling median
+    spike_factor: float = 4.0  # loss > factor * median(window) => spike
+    min_history: int = 5      # no spike verdicts until this many healthy
+    rollback_after: int = 3   # consecutive bad steps that trigger rollback
+
+    def __post_init__(self):
+        if self.window < 1 or self.min_history < 1:
+            raise ValueError("GuardConfig: window and min_history must be "
+                             ">= 1")
+        if self.spike_factor <= 1.0:
+            raise ValueError("GuardConfig: spike_factor must be > 1 "
+                             "(a factor <= 1 flags ordinary noise)")
+        if self.rollback_after < 1:
+            raise ValueError("GuardConfig: rollback_after must be >= 1")
+
+
+class TrainGuard:
+    """Per-step verdicts: ``OK`` | ``SKIP`` | ``ROLLBACK`` (see module
+    docstring for the escalation contract)."""
+
+    OK, SKIP, ROLLBACK = "ok", "skip", "rollback"
+
+    def __init__(self, cfg: GuardConfig = GuardConfig()):
+        self.cfg = cfg
+        self._window: deque[float] = deque(maxlen=cfg.window)
+        self.bad_streak = 0
+        self.nonfinite = 0
+        self.spikes = 0
+        self.skipped = 0
+        self.rollbacks = 0
+
+    def median(self) -> float | None:
+        return statistics.median(self._window) if self._window else None
+
+    def observe(self, loss: float, grads_finite: bool = True) -> str:
+        """Judge one completed step.  Healthy losses enter the rolling
+        window; bad ones never do (a spike must not poison the baseline
+        that detects the next spike)."""
+        reason = None
+        if not grads_finite or not math.isfinite(loss):
+            reason = "nonfinite"
+            self.nonfinite += 1
+        elif (len(self._window) >= self.cfg.min_history
+              and loss > self.cfg.spike_factor
+              * statistics.median(self._window)):
+            reason = "spike"
+            self.spikes += 1
+        if reason is None:
+            self._window.append(float(loss))
+            self.bad_streak = 0
+            return self.OK
+        self.bad_streak += 1
+        if self.bad_streak >= self.cfg.rollback_after:
+            self.rollbacks += 1
+            self.bad_streak = 0
+            return self.ROLLBACK
+        self.skipped += 1
+        return self.SKIP
+
+    def reset_history(self) -> None:
+        """Forget the loss window + streak — call after a rollback: the
+        restored params' losses get a fresh baseline."""
+        self._window.clear()
+        self.bad_streak = 0
+
+    def counters(self) -> dict:
+        return {"nonfinite": self.nonfinite, "spikes": self.spikes,
+                "skipped": self.skipped, "rollbacks": self.rollbacks,
+                "bad_streak": self.bad_streak,
+                "window": len(self._window)}

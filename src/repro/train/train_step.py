@@ -34,6 +34,9 @@ class TrainConfig:
     accum: int = 1                      # gradient-accumulation microbatches
     scan_unroll: int = 1                # layer-scan unroll (dry-run costing)
     use_loss_scale: bool = False        # fp16 path
+    skip_nonfinite: bool = False        # NaN/Inf-grad steps apply no update
+    #   (fp16 loss scaling always skips; this extends the in-jit guard to
+    #   the other policies — see train/guards.py for the escalation layer)
     opt: adamw.AdamWConfig = adamw.AdamWConfig()
     mem_budget_mb: int = 0              # >0: auto-solve a RematPlan to fit
 
@@ -138,7 +141,7 @@ def build_train_step(cfg: ModelConfig, tc: TrainConfig, mesh=None):
     def train_step(params, opt_state, loss_scale, batch):
         ls = loss_scale if tc.use_loss_scale else None
         loss, grads, finite = compute_grads(params, ls, batch)
-        skip = ~finite if tc.use_loss_scale else None
+        skip = ~finite if (tc.use_loss_scale or tc.skip_nonfinite) else None
         new_params, new_opt, metrics = adamw.update(
             tc.opt, grads, opt_state, params, skip=skip)
         new_ls = loss_scale.update(finite) if tc.use_loss_scale else loss_scale

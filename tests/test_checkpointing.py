@@ -79,3 +79,95 @@ def test_resharding_restore(tmp_ckpt):
                               shardings=sh)
     np.testing.assert_array_equal(np.asarray(out["w"]), np.asarray(s["w"]))
     assert out["w"].sharding == sh["w"]
+
+
+# -- manifest fingerprint + conflicting re-save (ISSUE 7) -------------------
+def test_fingerprint_mismatch_rejected(tmp_ckpt):
+    """Restoring one model's checkpoint into another's tree fails loudly
+    with the differing leaves named — not silently, not deep in jax."""
+    from repro.checkpointing.ckpt import CheckpointMismatchError
+    tmp_ckpt.save(1, {"w": jnp.zeros((4, 4)), "b": jnp.zeros((4,))})
+    with pytest.raises(CheckpointMismatchError, match="does not fit"):
+        tmp_ckpt.restore(1, {"w": jnp.zeros((4, 4)),
+                             "b": jnp.zeros((4,), jnp.int32)})  # dtype flip
+
+
+def test_config_identity_checked(tmp_ckpt):
+    from repro.checkpointing.ckpt import CheckpointMismatchError
+    s = {"w": jnp.zeros((4,))}
+    tmp_ckpt.save(1, s, config="llama3-8b")
+    out, _ = tmp_ckpt.restore(1, s, config="llama3-8b")   # match: fine
+    with pytest.raises(CheckpointMismatchError, match="whisper"):
+        tmp_ckpt.restore(1, s, config="whisper-large")
+    # caller not passing a config keeps the old lenient behavior
+    tmp_ckpt.restore(1, s)
+
+
+def test_conflicting_resave_rejected(tmp_ckpt):
+    """Same step, DIFFERENT state shape: no more silent no-op."""
+    from repro.checkpointing.ckpt import CheckpointMismatchError
+    tmp_ckpt.save(5, {"w": jnp.zeros((4,))}, config="arch-a")
+    with pytest.raises(CheckpointMismatchError, match="refusing"):
+        tmp_ckpt.save(5, {"w": jnp.zeros((8,))}, config="arch-a")
+    with pytest.raises(CheckpointMismatchError, match="config"):
+        tmp_ckpt.save(5, {"w": jnp.zeros((4,))}, config="other-arch")
+    # identical manifest stays an idempotent no-op (crash-resume re-save)
+    tmp_ckpt.save(5, {"w": jnp.ones((4,))}, config="arch-a")
+    assert tmp_ckpt.latest_step() == 5
+
+
+def test_tree_fingerprint_ignores_values():
+    from repro.checkpointing.ckpt import tree_fingerprint
+    a = tree_fingerprint({"w": jnp.zeros((4, 2)), "b": jnp.ones((3,))})
+    b = tree_fingerprint({"w": jnp.full((4, 2), 9.0), "b": jnp.ones((3,))})
+    c = tree_fingerprint({"w": jnp.zeros((4, 3)), "b": jnp.ones((3,))})
+    assert a == b and a != c
+
+
+# -- cross-mesh resharding round trip (ISSUE 7 satellite) -------------------
+multidevice = pytest.mark.skipif(
+    len(jax.devices()) < 8,
+    reason="needs 8 devices (XLA_FLAGS=--xla_force_host_platform_"
+           "device_count=8)")
+
+
+@multidevice
+def test_cross_mesh_resharding_roundtrip(tmp_path):
+    """Elastic restore, mesh to mesh: save real transformer params under
+    the 8-device (4,2) mesh, restore onto 1- and 2-device meshes and
+    back onto (4,2) — bit-exact at every hop."""
+    from repro import configs
+    from repro.distributed import sharding as shd
+    from repro.launch.mesh import make_mesh
+    from repro.models import transformer
+
+    cfg = configs.smoke_config("llama3-8b")
+    params = transformer.init_params(cfg, jax.random.PRNGKey(0))
+    ref = jax.tree_util.tree_map(lambda x: np.asarray(x), params)
+
+    def shardings_for(mesh):
+        return shd.to_shardings(mesh, shd.param_specs(cfg, params, mesh=mesh))
+
+    mesh8 = make_mesh((4, 2), ("data", "model"))
+    placed = jax.device_put(params, shardings_for(mesh8))
+    mgr = CheckpointManager(str(tmp_path / "xmesh"))
+    mgr.save(1, placed, config=cfg.arch_id)
+
+    state = placed
+    for shape in [(1, 1), (2, 1), (4, 2)]:
+        mesh = make_mesh(shape, ("data", "model"))
+        sh = shardings_for(mesh)
+        state, _ = mgr.restore(1, state, shardings=sh, config=cfg.arch_id)
+        for (pa, a), (pb, b) in zip(
+                jax.tree_util.tree_leaves_with_path(ref),
+                jax.tree_util.tree_leaves_with_path(state)):
+            np.testing.assert_array_equal(
+                a, np.asarray(b), err_msg=f"{shape}: {jax.tree_util.keystr(pb)}")
+        # round-trip through the smaller mesh must also SAVE identically
+        mgr2 = CheckpointManager(str(tmp_path / f"xmesh_{shape[0]}x{shape[1]}"))
+        mgr2.save(1, state, config=cfg.arch_id)
+        back, _ = mgr2.restore(1, state, shardings=shardings_for(mesh8),
+                               config=cfg.arch_id)
+        for a, b in zip(jax.tree_util.tree_leaves(ref),
+                        jax.tree_util.tree_leaves(back)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))

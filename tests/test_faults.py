@@ -1,0 +1,525 @@
+"""Fault tolerance (ISSUE 7): scheduler terminal states, bounded queue +
+deadlines, pool quarantine/audit, the fused decode health sentinel, seeded
+fault injection with deterministic replay, graceful drain, stalled
+summaries, and the training guards (NaN-skip + rollback).
+
+The acceptance scenario: under a seeded FaultPlan (NaN logits, corrupted
+cache row, dropped scatter, cancel/deadline storms) the engine drains
+with zero slot leaks, every SURVIVING request's tokens exactly match a
+fault-free greedy run, summary counts reconcile with the plan, and the
+jit program cache stays frozen — detection and recovery cost no
+recompiles and no extra host syncs.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.models import transformer
+from repro.serve import (CANCELLED, DONE, DROPPED, FAILED, QUEUED,
+                         AdmissionRejected, FaultInjector, FaultPlan,
+                         Request, Scheduler, ServeEngine, SlotPool,
+                         TraceRequest)
+from repro.train.guards import GuardConfig, TrainGuard
+
+
+def _smoke_cfg():
+    return configs.smoke_config("llama3-8b")
+
+
+@pytest.fixture(scope="module")
+def llama():
+    cfg = _smoke_cfg()
+    return cfg, transformer.init_params(cfg, jax.random.PRNGKey(0))
+
+
+@pytest.fixture(scope="module")
+def engine_mod(llama):
+    cfg, params = llama
+    eng = ServeEngine(params, cfg, max_slots=3, max_len=32, max_retries=2)
+    eng.warmup()
+    return eng
+
+
+@pytest.fixture
+def engine(engine_mod):
+    """Shared warmed-up engine, reset to a clean slate per test (the
+    compiled programs persist — that is the point of the contract)."""
+    engine_mod.reset()
+    engine_mod.hooks.clear()
+    engine_mod.deadline_steps = None
+    engine_mod.max_retries = 2
+    engine_mod.retry_backoff_steps = 1
+    engine_mod.scheduler.max_queue = None
+    yield engine_mod
+
+
+def _prompts(n, seed=0, lo=4, hi=10):
+    rng = np.random.default_rng(seed)
+    vocab = _smoke_cfg().vocab
+    return [rng.integers(1, vocab, size=int(rng.integers(lo, hi)))
+            .astype(np.int32) for _ in range(n)]
+
+
+def _run_to_drain(eng, guard=400):
+    while eng.scheduler.has_work() and guard:
+        eng.step()
+        guard -= 1
+    assert guard, "engine failed to drain"
+
+
+def _done_tokens(eng):
+    return {r.rid: list(r.tokens) for r in eng._requests_done}
+
+
+# ---------------------------------------------------------------------------
+class TestSchedulerFailureStates:
+    def test_bounded_queue_rejects(self):
+        s = Scheduler(2, max_queue=2)
+        s.submit(Request(0, [1, 2], 4))
+        s.submit(Request(1, [1, 2], 4))
+        with pytest.raises(AdmissionRejected, match="queue full"):
+            s.submit(Request(2, [1, 2], 4))
+        assert s.rejected == 1 and s.queue_depth == 2
+        assert s.state_counts()["REJECTED"] == 1
+
+    def test_shed_expired_anywhere_in_line(self):
+        s = Scheduler(1)
+        hold = Request(0, [1], 4)                       # no deadline
+        dead = Request(1, [1], 4, deadline_steps=2)
+        live = Request(2, [1], 4, deadline_steps=50)
+        for r in (hold, dead, live):
+            s.submit(r)
+        assert s.shed_expired(2) == []                  # not yet: TTL is >
+        shed = s.shed_expired(3)
+        assert shed == [dead] and dead.state == DROPPED
+        assert [r.rid for r in s._queue] == [0, 2]      # mid-line removal
+        assert s.terminal_counts[DROPPED] == 1
+
+    def test_cancel_queued(self):
+        s = Scheduler(1)
+        r = Request(0, [1], 4)
+        s.submit(r)
+        s.cancel_queued(r)
+        assert r.state == CANCELLED and s.queue_depth == 0
+        with pytest.raises(ValueError, match="CANCELLED"):
+            s.cancel_queued(r)
+
+    def test_requeue_goes_to_head(self):
+        s = Scheduler(2)
+        a, b = Request(0, [1], 4), Request(1, [1], 4)
+        s.submit(a), s.submit(b)
+        [adm] = s.pop_admissible(1, 0)
+        assert adm is a and s.resident == 1
+        s.requeue(a, arrival_step=5)
+        assert s.resident == 0 and a.state == QUEUED
+        assert [r.rid for r in s._queue] == [0, 1]      # head, not tail
+        assert a.arrival_step == 5
+        # backoff holds the line until arrival_step
+        assert s.pop_admissible(2, now_step=4) == []
+        assert s.pop_admissible(2, now_step=5)[0] is a
+
+    def test_retire_terminal_states(self):
+        s = Scheduler(1)
+        r = Request(0, [1], 4)
+        s.submit(r)
+        s.pop_admissible(1, 0)
+        with pytest.raises(ValueError, match="not terminal"):
+            s.retire(r, state=QUEUED)
+        s.retire(r, state=FAILED)
+        assert r.state == FAILED and s.terminal_counts[FAILED] == 1
+        with pytest.raises(ValueError, match="FAILED"):
+            s.retire(r)                                 # terminal is final
+
+
+class TestSlotPoolQuarantine:
+    def test_quarantine_release_accounting(self):
+        pool = SlotPool(_smoke_cfg(), 3, 32)
+        a, b = pool.alloc(), pool.alloc()
+        pool.quarantine(a)
+        assert pool.quarantined == 1 and pool.occupancy == 1
+        assert pool.frees == 0                          # free counts at release
+        snap = pool.audit()
+        assert snap == {"free": 1, "live": 1, "quarantined": 1,
+                        "allocs": 2, "frees": 0}
+        assert pool.release_quarantined() == [a]
+        pool.free(b)
+        assert pool.allocs == pool.frees == 2           # invariant restored
+        assert pool.quarantined == 0 and pool.free_slots == 3
+        pool.audit()
+
+    def test_quarantine_requires_live(self):
+        pool = SlotPool(_smoke_cfg(), 2, 32)
+        with pytest.raises(ValueError, match="not live"):
+            pool.quarantine(0)
+        s = pool.alloc()
+        pool.quarantine(s)
+        with pytest.raises(ValueError, match="not live"):
+            pool.free(s)                                # quarantined != live
+
+    def test_audit_catches_corruption(self):
+        pool = SlotPool(_smoke_cfg(), 2, 32)
+        s = pool.alloc()
+        pool._free.append(s)                            # slot in two states
+        with pytest.raises(RuntimeError, match="two states"):
+            pool.audit()
+        pool = SlotPool(_smoke_cfg(), 2, 32)
+        pool.alloc()
+        pool.frees += 1                                 # counter drift
+        with pytest.raises(RuntimeError, match="allocs"):
+            pool.audit()
+
+
+# ---------------------------------------------------------------------------
+class TestFaultPlan:
+    def test_plan_validation(self):
+        with pytest.raises(ValueError, match="unknown kind"):
+            FaultPlan().add(1, "meteor")
+        with pytest.raises(ValueError, match="needs a rid"):
+            FaultPlan().cancel(1, rid=None)
+
+    def test_at_and_counts(self):
+        plan = FaultPlan().nan_logits(3, rid=0).corrupt_row(3, rid=1) \
+                          .cancel(5, rid=2)
+        assert len(plan.at(3)) == 2 and len(plan.at(3, "nan_logits")) == 1
+        assert plan.counts() == {"nan_logits": 1, "corrupt_row": 1,
+                                 "cancel": 1}
+
+
+class TestEngineFaultRecovery:
+    def test_acceptance_nan_corrupt_drop(self, engine):
+        """The ISSUE acceptance scenario: three fault kinds land, every
+        victim recovers via quarantine + replay, survivors are
+        token-exact vs the fault-free greedy run, zero slot leaks, and
+        the program cache never grows."""
+        prompts = _prompts(3, seed=1)
+        # fault-free reference on the same engine (then reset)
+        for p in prompts:
+            engine.submit(p, 6)
+        _run_to_drain(engine)
+        ref = _done_tokens(engine)
+        engine.reset()
+
+        compiles = engine.compile_counts()
+        rids = [engine.submit(p, 6) for p in prompts]
+        plan = (FaultPlan()
+                .drop_scatter(2, rid=rids[2])
+                .nan_logits(3, rid=rids[0])
+                .corrupt_row(4, rid=rids[1]))
+        inj = FaultInjector(engine, plan)
+        _run_to_drain(engine)
+        s = engine.summary()
+
+        assert dict(inj.injected) == {"drop_scatter": 1, "nan_logits": 1,
+                                      "corrupt_row": 1}
+        assert s["n_faults"] == 3 and s["n_retried"] == 3
+        assert s["n_done"] == 3 and s["n_failed"] == 0
+        assert s["retry_success_rate"] == 1.0
+        assert not s["stalled"]
+        got = _done_tokens(engine)
+        assert got == ref                       # token-exact survivors
+        # zero slot leaks, quarantine fully released
+        assert engine.pool.allocs == engine.pool.frees
+        assert engine.pool.occupancy == 0 == engine.pool.quarantined
+        assert engine.pool.quarantines == 3
+        engine.pool.audit()
+        # the sentinel + injection cost no recompiles
+        assert engine.compile_counts() == compiles
+        # goodput == throughput here: every request finished
+        assert s["goodput_tokens"] == s["total_tokens"]
+
+    def test_faulted_step_emits_no_token(self, engine):
+        """The poisoned round's sampled token must never reach the
+        client — replay restarts from the last HEALTHY token."""
+        [p] = _prompts(1, seed=3)
+        rid = engine.submit(p, 5)
+        plan = FaultPlan().nan_logits(2, rid=rid)
+        FaultInjector(engine, plan)
+        lens = []
+        while engine.scheduler.has_work():
+            engine.step()
+            lens.append(len(engine._requests[rid].tokens))
+        # token count never decreases and ends complete: the faulted
+        # round contributed nothing
+        assert all(b >= a for a, b in zip(lens, lens[1:]))
+        assert lens[-1] == 5
+        assert engine._requests[rid].state == DONE
+
+    def test_retry_budget_exhausts_to_failed(self, engine):
+        """A persistently poisoned request escalates to FAILED after
+        max_retries replays; healthy neighbors still finish exactly."""
+        prompts = _prompts(2, seed=2)
+        for p in prompts:
+            engine.submit(p, 5)
+        _run_to_drain(engine)
+        ref = _done_tokens(engine)
+        engine.reset()
+
+        rids = [engine.submit(p, 5) for p in prompts]
+        plan = FaultPlan()
+        for step in range(1, 40):                   # poison rid0 forever
+            plan.nan_logits(step, rid=rids[0])
+        inj = FaultInjector(engine, plan)
+        _run_to_drain(engine)
+        s = engine.summary()
+
+        victim = engine._requests[rids[0]]
+        assert victim.state == FAILED
+        assert "retry budget exhausted" in victim.fail_reason
+        assert victim.retries == 2                  # engine.max_retries
+        assert s["n_failed"] == 1 and s["n_done"] == 1
+        assert s["retry_success_rate"] == 0.0       # the one retried req died
+        assert inj.injected["nan_logits"] == 3      # initial + 2 replays
+        survivor = engine._requests[rids[1]]
+        assert list(survivor.tokens) == ref[rids[1]]
+        assert engine.pool.allocs == engine.pool.frees
+        assert engine.pool.occupancy == 0
+        # goodput excludes the failed request's emitted-then-lost tokens
+        assert s["goodput_tokens"] == len(survivor.tokens)
+
+    def test_cancel_storm_and_accounting(self, engine):
+        prompts = _prompts(6, seed=4)
+        rids = [engine.submit(p, 6) for p in prompts]
+        # cancel two while queued (slots=3, so 3+ wait) and one resident
+        plan = (FaultPlan().cancel(0, rid=rids[4]).cancel(0, rid=rids[5])
+                .cancel(2, rid=rids[0]))
+        inj = FaultInjector(engine, plan)
+        _run_to_drain(engine)
+        s = engine.summary()
+        assert inj.injected["cancel"] == 3
+        assert s["n_cancelled"] == 3 and s["n_done"] == 3
+        assert s["n_requests"] == 6
+        assert engine.pool.allocs == engine.pool.frees
+        assert engine.pool.occupancy == 0
+        # cancelling again or cancelling unknown rids is a no-op
+        assert not engine.cancel(rids[0])
+        assert not engine.cancel(999)
+
+    def test_deadline_shedding(self, engine):
+        """Queue TTLs shed overload instead of queueing forever: with 3
+        slots and a 2-step TTL, late arrivals expire in line."""
+        prompts = _prompts(8, seed=5)
+        for p in prompts:
+            engine.submit(p, 8, deadline_steps=2)
+        _run_to_drain(engine)
+        s = engine.summary()
+        assert s["n_dropped"] > 0
+        assert s["n_done"] + s["n_dropped"] == 8
+        assert s["diagnostics"]["state_counts"][DROPPED] == s["n_dropped"]
+        assert engine.pool.allocs == engine.pool.frees
+        assert engine.pool.occupancy == 0
+
+    def test_bounded_queue_backpressure(self, engine):
+        engine.scheduler.max_queue = 2
+        prompts = _prompts(4, seed=6)
+        engine.submit(prompts[0], 4)
+        engine.submit(prompts[1], 4)
+        rid_before = engine._next_rid
+        with pytest.raises(AdmissionRejected):
+            engine.submit(prompts[2], 4)
+        # the rejected submit never entered the system: no rid consumed
+        assert engine._next_rid == rid_before
+        assert engine.metrics.rejected == 1
+        _run_to_drain(engine)
+        s = engine.summary()
+        assert s["n_rejected"] == 1 and s["n_done"] == 2
+
+    def test_drain_graceful(self, engine):
+        prompts = _prompts(5, seed=7)
+        rids = [engine.submit(p, 6) for p in prompts]
+        engine.step()                               # some become resident
+        resident = [r for r in rids
+                    if engine._requests[r].state not in (QUEUED,)]
+        s = engine.drain()
+        assert engine.scheduler.resident == 0
+        assert engine.pool.occupancy == 0
+        assert engine.pool.allocs == engine.pool.frees
+        # resident requests finished; the still-queued were cancelled
+        assert s["n_done"] >= len([r for r in resident
+                                   if engine._requests[r].state == DONE])
+        assert s["n_done"] + s["n_cancelled"] == 5
+
+    def test_run_stalled_returns_partial_summary(self, engine):
+        """Satellite: a budget-exhausted run keeps its metrics and says
+        WHY, instead of raising them away."""
+        trace = [TraceRequest(arrival_step=0, prompt=p, max_new_tokens=8)
+                 for p in _prompts(3, seed=8)]
+        s = engine.run(trace, max_steps=2)
+        assert s["stalled"] is True
+        d = s["diagnostics"]
+        assert d["resident"] > 0 or d["queue_depth"] > 0
+        assert set(d["state_counts"]) >= {QUEUED, "RESIDENT", DONE,
+                                          CANCELLED, DROPPED, FAILED}
+        assert d["pool"]["allocs"] >= d["pool"]["frees"]
+        # and the engine is still coherent: drain finishes the work
+        s2 = engine.drain()
+        assert not s2["stalled"]
+        assert engine.pool.occupancy == 0
+        assert engine.pool.allocs == engine.pool.frees
+
+    def test_seeded_sampling_replay_deterministic(self, llama):
+        """Under temperature sampling the replay guarantee is
+        seeded-deterministic: the same seed + same fault plan produce
+        identical tokens across runs."""
+        cfg, params = llama
+        eng = ServeEngine(params, cfg, max_slots=2, max_len=32,
+                          temperature=0.8, top_k=8, seed=7, max_retries=2)
+        eng.warmup()
+
+        def faulted_run():
+            eng.reset()
+            eng.hooks.clear()
+            rid = eng.submit(np.arange(1, 6, dtype=np.int32), 5)
+            FaultInjector(eng, FaultPlan().nan_logits(2, rid=rid))
+            _run_to_drain(eng)
+            assert eng.metrics.faults == 1
+            return _done_tokens(eng)
+
+        assert faulted_run() == faulted_run()
+
+
+# ---------------------------------------------------------------------------
+class TestTrainGuard:
+    def test_config_validation(self):
+        with pytest.raises(ValueError, match="spike_factor"):
+            GuardConfig(spike_factor=0.5)
+        with pytest.raises(ValueError, match="rollback_after"):
+            GuardConfig(rollback_after=0)
+
+    def test_nonfinite_escalation(self):
+        g = TrainGuard(GuardConfig(rollback_after=3))
+        assert g.observe(1.0, True) == TrainGuard.OK
+        assert g.observe(float("nan"), False) == TrainGuard.SKIP
+        assert g.observe(2.0, False) == TrainGuard.SKIP   # grads NaN, loss ok
+        assert g.observe(1.0, False) == TrainGuard.ROLLBACK
+        assert g.counters()["nonfinite"] == 3
+        assert g.bad_streak == 0                          # reset by rollback
+
+    def test_healthy_step_resets_streak(self):
+        g = TrainGuard(GuardConfig(rollback_after=3))
+        g.observe(1.0, True)
+        g.observe(float("inf"), False)
+        g.observe(float("inf"), False)
+        assert g.observe(1.0, True) == TrainGuard.OK      # streak broken
+        assert g.observe(float("inf"), False) == TrainGuard.SKIP
+        assert g.rollbacks == 0
+
+    def test_spike_detection_median_window(self):
+        g = TrainGuard(GuardConfig(min_history=3, spike_factor=4.0))
+        for loss in (1.0, 1.1, 0.9):
+            assert g.observe(loss, True) == TrainGuard.OK
+        assert g.observe(3.9, True) == TrainGuard.OK      # < 4x median
+        assert g.observe(40.0, True) == TrainGuard.SKIP   # spike
+        # the spike never entered the window: median still ~1
+        assert g.median() < 2.0
+        assert g.counters()["spikes"] == 1
+
+    def test_no_spike_verdicts_before_history(self):
+        g = TrainGuard(GuardConfig(min_history=5))
+        assert g.observe(1.0, True) == TrainGuard.OK
+        assert g.observe(1000.0, True) == TrainGuard.OK   # too early to judge
+
+    def test_reset_history(self):
+        g = TrainGuard(GuardConfig(min_history=2))
+        g.observe(1.0, True), g.observe(1.0, True)
+        g.reset_history()
+        assert g.median() is None
+        assert g.observe(500.0, True) == TrainGuard.OK    # fresh baseline
+
+
+class TestTrainGuardRollback:
+    """NaN-grad steps are skipped IN-JIT and consecutive bad steps roll
+    back to the last good checkpoint, resuming with matching loss — the
+    trainer half of the acceptance criteria, on a toy quadratic model
+    (the real train_step shares the same all_finite + adamw skip path)."""
+
+    def _setup(self):
+        from repro.core.mixed_precision import all_finite
+        from repro.optim import adamw
+
+        oc = adamw.AdamWConfig(lr=1e-2, total_steps=100, warmup_steps=1)
+
+        def loss_fn(p, batch):
+            pred = batch["x"] @ p["w"]
+            return jnp.mean((pred - batch["y"]) ** 2)
+
+        @jax.jit
+        def step_fn(p, opt, batch):
+            loss, grads = jax.value_and_grad(loss_fn)(p, batch)
+            finite = all_finite(grads)
+            new_p, new_opt, m = adamw.update(oc, grads, opt, p,
+                                             skip=~finite)
+            return new_p, new_opt, {"loss": loss, "grads_finite": finite,
+                                    **m}
+
+        def batch_for(i, poisoned=False):
+            rng = np.random.default_rng(i)
+            x = rng.normal(size=(8, 4)).astype(np.float32)
+            w_true = np.linspace(0.0, 1.0, 8, dtype=np.float32).reshape(4, 2)
+            y = x @ w_true
+            if poisoned:
+                x = x.copy()
+                x[0, 0] = np.nan
+            return {"x": jnp.asarray(x), "y": jnp.asarray(y)}
+
+        params = {"w": jnp.zeros((4, 2))}
+        return step_fn, batch_for, params, adamw.init(params)
+
+    def test_nan_step_applies_no_update(self):
+        step_fn, batch_for, params, opt = self._setup()
+        params, opt, _ = step_fn(params, opt, batch_for(0))
+        w_before = np.asarray(params["w"])
+        count_before = int(opt.count)
+        params, opt, m = step_fn(params, opt, batch_for(1, poisoned=True))
+        assert not bool(m["grads_finite"])
+        np.testing.assert_array_equal(np.asarray(params["w"]), w_before)
+        assert int(opt.count) == count_before      # optimizer clock frozen too
+
+    def test_rollback_resumes_from_last_good_checkpoint(self, tmp_path):
+        from repro.checkpointing.ckpt import CheckpointManager
+
+        step_fn, batch_for, params, opt = self._setup()
+        mgr = CheckpointManager(str(tmp_path / "g"), keep_last=2)
+        guard = TrainGuard(GuardConfig(window=8, min_history=2,
+                                       rollback_after=3))
+        losses = {}
+        step = 0
+        while step < 6:
+            params, opt, m = step_fn(params, opt, batch_for(step))
+            assert guard.observe(float(m["loss"]),
+                                 bool(m["grads_finite"])) == TrainGuard.OK
+            losses[step] = float(m["loss"])
+            step += 1
+            if step == 4:
+                mgr.save(step, {"params": params, "opt": opt},
+                         extra={"step": step}, config="toy")
+
+        # three consecutive NaN-grad steps: SKIP, SKIP, ROLLBACK
+        verdicts = []
+        for _ in range(3):
+            params, opt, m = step_fn(params, opt,
+                                     batch_for(step, poisoned=True))
+            verdicts.append(guard.observe(float(m["loss"]),
+                                          bool(m["grads_finite"])))
+        assert verdicts == [TrainGuard.SKIP, TrainGuard.SKIP,
+                            TrainGuard.ROLLBACK]
+
+        latest = mgr.latest_step()
+        assert latest == 4
+        restored, extra = mgr.restore(
+            latest, {"params": params, "opt": opt}, config="toy")
+        params, opt = restored["params"], restored["opt"]
+        step = extra["step"]
+        guard.reset_history()
+
+        # replaying the healthy stream from the checkpoint reproduces
+        # the original trajectory exactly
+        for replay in (4, 5):
+            params, opt, m = step_fn(params, opt, batch_for(replay))
+            assert float(m["loss"]) == losses[replay]
+            assert guard.observe(float(m["loss"]),
+                                 bool(m["grads_finite"])) == TrainGuard.OK
+        assert guard.rollbacks == 1

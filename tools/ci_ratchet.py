@@ -40,11 +40,16 @@ import xml.etree.ElementTree as ET
 # 1/2/8-device meshes, 8-device flash train grad parity, token-exact
 # mesh serving heads+seq with no-all-gather HLO assertion, int8 decode
 # collective vs oracle, compressed psum-grad parity/unbiasedness,
-# per-device planner budgets): 0 failed / 420 passed on one device —
-# the 8-device CI grid unskips 7 more; the lock stays at the 1-device
-# floor so the suite passes anywhere.
+# per-device planner budgets): 0 failed / 420 passed on one device;
+# PR 7 (fault tolerance: scheduler terminal states + bounded queue +
+# deadlines, decode health sentinel + quarantine/replay under seeded
+# fault injection, train guards with NaN-skip + rollback, checkpoint
+# fingerprint/config identity + conflicting-resave rejection):
+# 0 failed / 451 passed on one device — the 8-device CI grid unskips 8
+# more (7 mesh + the cross-mesh checkpoint round-trip); the lock stays
+# at the 1-device floor so the suite passes anywhere.
 MAX_FAILED = 0
-MIN_PASSED = 420
+MIN_PASSED = 451
 
 # Benchmark floors (path into the committed BENCH json, minimum value or
 # required flag).  Floors sit safely under the committed results so normal
@@ -53,8 +58,21 @@ MIN_PASSED = 420
 # sharding losing parity) trips them.
 BENCH_FLOORS = [
     # serve engine: continuous batching must keep a real throughput win
-    # over lockstep (committed: 1.55x)
-    ("BENCH_serve.json", ("speedup_tokens_per_s",), 1.3),
+    # over lockstep.  PR 7 re-based this floor: the bench now times both
+    # sides best-of-3 at steady state (the old single-shot timing charged
+    # lockstep its cold-start costs and inflated the win to 1.55x);
+    # honest steady-state is ~1.2-1.3x on the smoke trace (committed:
+    # 1.21x)
+    ("BENCH_serve.json", ("speedup_tokens_per_s",), 1.1),
+    # fault tolerance (ISSUE 7): under the canonical seeded fault plan
+    # (NaN logits + corrupt cache row + dropped scatter) the engine must
+    # recover every victim (no slot leaks, every retry reaches DONE) and
+    # keep real goodput (committed: 4116 tok/s, 0.78x fault-free)
+    ("BENCH_serve.json", ("fault_trace", "zero_slot_leaks"), True),
+    ("BENCH_serve.json", ("fault_trace", "retry_success_rate"), 0.99),
+    ("BENCH_serve.json", ("fault_trace", "goodput_tokens_per_s"), 3000),
+    ("BENCH_serve.json", ("fault_trace", "goodput_frac_of_fault_free"),
+     0.55),
     # split-K int8 decode: ragged-batch tile claw-back (committed: 0.75)
     ("BENCH_decode.json", ("tile_clawback_s2048_ragged", "skip_frac"), 0.70),
     # sparse flash grids (committed: 0.47 causal, 0.82 windowed)
