@@ -574,47 +574,16 @@ def serve_trace():
                             arrival_rate=1.0)
     useful = sum(r.max_new_tokens for r in trace)
 
-    # ---- continuous batching
+    # ---- continuous batching vs lockstep, interleaved best-of-5: both
+    # sides are ~50 ms walls on CPU, so OS/allocator noise between two
+    # separately-timed blocks can swing the ratio by 20%+ (observed while
+    # re-basing for ISSUE 8).  Alternating one engine pass with one
+    # lockstep pass inside the SAME loop makes any machine-state drift
+    # hit both sides equally; min-of-5 then compares steady-state floors.
     eng = ServeEngine(params, cfg, max_slots=slots, max_len=max_len,
                       prompt_buckets=(bucket,), seed=0)
     compiles = eng.warmup()
-    # best-of-3 (reset keeps the compiled programs): the lockstep baseline
-    # below gets a full warm data pass before its timed run, so the engine
-    # must get the same steady-state treatment or run-to-run allocator
-    # noise swamps the comparison
-    wall_e = float("inf")
-    for _ in range(3):
-        eng.reset()
-        t0 = time.perf_counter()
-        summary = eng.run(trace)
-        wall_e = min(wall_e, time.perf_counter() - t0)
-    assert eng.compile_counts() == compiles, "engine re-jitted mid-trace"
-    assert summary["total_tokens"] == useful
 
-    # ---- same trace under seeded faults (ISSUE 7): the canonical
-    # detect -> quarantine -> replay run.  Victims and steps are pinned to
-    # this seeded trace (replay prompts must fit the 16-token bucket; a
-    # drop_scatter victim must land on a first-use slot for the pos>0
-    # sentinel); the injected-count asserts catch any drift.
-    from repro.serve import FaultInjector, FaultPlan
-    wall_f = float("inf")
-    for _ in range(3):
-        eng.reset()
-        plan = (FaultPlan().drop_scatter(3, rid=3).nan_logits(5, rid=0)
-                .corrupt_row(15, rid=6))
-        inj = FaultInjector(eng, plan)
-        t0 = time.perf_counter()
-        fsum = eng.run(trace)
-        wall_f = min(wall_f, time.perf_counter() - t0)
-        inj.uninstall()
-        assert dict(inj.injected) == {"drop_scatter": 1, "nan_logits": 1,
-                                      "corrupt_row": 1}, inj.injected
-    assert eng.compile_counts() == compiles, "fault injection re-jitted"
-    assert fsum["n_failed"] == 0 and fsum["n_done"] == len(trace)
-    leaks = eng.pool.allocs - eng.pool.frees + eng.pool.occupancy
-    goodput_f = fsum["goodput_tokens"] / wall_f
-
-    # ---- lockstep baseline: same trace, fixed FCFS groups of `slots`
     prefill = jax.jit(build_prefill_step(cfg, quantized=True,
                                          s_max=max_len))
     decode = jax.jit(build_decode_step(cfg, quantized=True))
@@ -644,11 +613,88 @@ def serve_trace():
         return slot_steps, ttfts / len(trace)
 
     run_lockstep()                                      # compile warmup
-    wall_l = float("inf")
-    for _ in range(3):
+    wall_e = wall_l = float("inf")
+    for _ in range(5):
+        eng.reset()
+        t0 = time.perf_counter()
+        summary = eng.run(trace)
+        wall_e = min(wall_e, time.perf_counter() - t0)
         t0 = time.perf_counter()
         slot_steps, ttft_lock = run_lockstep()
         wall_l = min(wall_l, time.perf_counter() - t0)
+    assert eng.compile_counts() == compiles, "engine re-jitted mid-trace"
+    assert summary["total_tokens"] == useful
+
+    # ---- same trace under seeded faults (ISSUE 7): the canonical
+    # detect -> quarantine -> replay run.  Victims and steps are pinned to
+    # this seeded trace (replay prompts must fit the 16-token bucket; a
+    # drop_scatter victim must land on a first-use slot for the pos>0
+    # sentinel); the injected-count asserts catch any drift.
+    from repro.serve import FaultInjector, FaultPlan
+    wall_f = float("inf")
+    for _ in range(3):
+        eng.reset()
+        plan = (FaultPlan().drop_scatter(3, rid=3).nan_logits(5, rid=0)
+                .corrupt_row(15, rid=6))
+        inj = FaultInjector(eng, plan)
+        t0 = time.perf_counter()
+        fsum = eng.run(trace)
+        wall_f = min(wall_f, time.perf_counter() - t0)
+        inj.uninstall()
+        assert dict(inj.injected) == {"drop_scatter": 1, "nan_logits": 1,
+                                      "corrupt_row": 1}, inj.injected
+    assert eng.compile_counts() == compiles, "fault injection re-jitted"
+    assert fsum["n_failed"] == 0 and fsum["n_done"] == len(trace)
+    leaks = eng.pool.allocs - eng.pool.frees + eng.pool.occupancy
+    goodput_f = fsum["goodput_tokens"] / wall_f
+
+    # ---- replica fleet (ISSUE 8): 2 engines behind the router, same
+    # trace, one replica killed mid-trace.  The canonical seeded failover
+    # run: every request still completes (migrated ones replay from
+    # prompt + emitted tokens on the survivor), and the ratchet floors
+    # failover_replay_success and the goodput ratio vs the fault-free
+    # fleet.
+    from repro.serve import FleetFaultInjector, Router
+
+    # a mid-trace failover replays prompt + emitted tokens, so fleet
+    # replicas carry a second prefill bucket big enough for any replay
+    # (max_prompt 16 + max_gen 48 = 64); single-engine runs above pin
+    # faults early enough to fit one bucket, a killed replica can't
+    fleet_eng = [ServeEngine(params, cfg, max_slots=slots, max_len=max_len,
+                             prompt_buckets=(bucket, 64), seed=0,
+                             sampler_keys="request")
+                 for _ in range(2)]
+    fleet_compiles = [e.warmup() for e in fleet_eng]
+
+    wall_ff = float("inf")
+    for _ in range(3):
+        for e in fleet_eng:
+            e.reset()
+        router = Router(fleet_eng)
+        t0 = time.perf_counter()
+        ffsum = router.run(trace)
+        wall_ff = min(wall_ff, time.perf_counter() - t0)
+    assert ffsum["fleet"]["n_done"] == len(trace)
+
+    wall_k = float("inf")
+    for _ in range(3):
+        for e in fleet_eng:
+            e.reset()
+        router = Router(fleet_eng)
+        kplan = FaultPlan().replica_crash(4, 1)
+        kinj = FleetFaultInjector(router, kplan)
+        t0 = time.perf_counter()
+        ksum = router.run(trace)
+        wall_k = min(wall_k, time.perf_counter() - t0)
+        assert kinj.crashed == {1}, kinj.injected
+    for e, c in zip(fleet_eng, fleet_compiles):
+        assert e.compile_counts() == c, "fleet replica re-jitted"
+    fleet_leaks = sum(e.pool.allocs - e.pool.frees + e.pool.occupancy
+                      for e in fleet_eng)
+    assert ksum["fleet"]["n_done"] == len(trace), ksum["fleet"]
+    assert ksum["reconcile"]["ok"], ksum["reconcile"]
+    goodput_ff = ffsum["fleet"]["goodput_tokens"] / wall_ff
+    goodput_k = ksum["fleet"]["goodput_tokens"] / wall_k
 
     tps_e = useful / wall_e
     tps_l = useful / wall_l
@@ -662,6 +708,12 @@ def serve_trace():
             "occupancy_mean": round(summary["occupancy_mean"], 2),
             "engine_steps": summary["n_steps"],
             "wasted_slot_steps": summary["n_steps"] * slots - useful,
+            # deterministic packing quality on the seeded trace (no wall
+            # clock involved): useful tokens per slot-step the engine
+            # actually ran — the structural win continuous batching
+            # ratchets regardless of machine noise
+            "slot_step_efficiency":
+                round(useful / (summary["n_steps"] * slots), 3),
         },
         "lockstep": {
             "tokens_per_s": round(tps_l, 1), "wall_s": round(wall_l, 3),
@@ -682,9 +734,38 @@ def serve_trace():
             "zero_slot_leaks": leaks == 0,
             "engine_steps": fsum["n_steps"],
         },
+        "fleet": {
+            "replicas": 2,
+            "fault_free": {
+                "wall_s": round(wall_ff, 3),
+                "router_steps": ffsum["step_no"],
+                "goodput_tokens": ffsum["fleet"]["goodput_tokens"],
+                "goodput_tokens_per_s": round(goodput_ff, 1),
+            },
+            "replica_kill": {
+                "kill_step": 4, "replica": 1,
+                "wall_s": round(wall_k, 3),
+                "router_steps": ksum["step_no"],
+                "failovers": ksum["fleet"]["failovers"],
+                "n_migrations": ksum["fleet"]["n_migrations"],
+                "failover_replay_success":
+                    ksum["fleet"]["replay_success_rate"],
+                "n_done": ksum["fleet"]["n_done"],
+                "goodput_tokens": ksum["fleet"]["goodput_tokens"],
+                "goodput_tokens_per_s": round(goodput_k, 1),
+                "goodput_frac_of_fault_free":
+                    round(goodput_k / goodput_ff, 3),
+                "zero_slot_leaks": fleet_leaks == 0,
+            },
+        },
     }
     _rows("serve_trace_faulted", wall_f * 1e6,
           f"goodput_tok_s={goodput_f:.1f},faults={fsum['n_faults']}")
+    _rows("serve_fleet_fault_free", wall_ff * 1e6,
+          f"goodput_tok_s={goodput_ff:.1f},replicas=2")
+    _rows("serve_fleet_replica_kill", wall_k * 1e6,
+          f"goodput_tok_s={goodput_k:.1f},"
+          f"failovers={ksum['fleet']['failovers']}")
     _rows("serve_trace_continuous", wall_e * 1e6,
           f"tok_s={tps_e:.1f},occ={summary['occupancy_mean']:.2f}")
     _rows("serve_trace_lockstep", wall_l * 1e6, f"tok_s={tps_l:.1f}")

@@ -11,6 +11,13 @@ Design (multi-host ready, exercised single-host here):
     new sharding -> elastic scaling (checkpoint from 512 chips restores
     onto 8, or onto a different mesh shape).
   * keep_last limits disk; ``latest_step`` finds the resume point.
+  * Every shard file's sha256 goes into the manifest and is re-verified
+    on restore — silent bit-rot surfaces as a named
+    :class:`CheckpointMismatchError`, not a garbage parameter tree.
+  * ``latest_intact_step`` / ``restore_latest`` fall back PAST a
+    damaged newest checkpoint to the newest one that still verifies
+    (with a warning) — a torn or corrupted write costs one checkpoint
+    interval, never the run.
   * SIGTERM handler (launcher) triggers a final save -> preemption safe.
 """
 from __future__ import annotations
@@ -21,6 +28,7 @@ import json
 import os
 import shutil
 import time
+import warnings
 from typing import Any, Optional
 
 import jax
@@ -74,6 +82,17 @@ def tree_fingerprint(tree) -> str:
     return _sig_fingerprint(_leaf_sig(tree))
 
 
+def _file_sha256(path: str, chunk: int = 1 << 20) -> str:
+    h = hashlib.sha256()
+    with open(path, "rb") as f:
+        while True:
+            block = f.read(chunk)
+            if not block:
+                break
+            h.update(block)
+    return h.hexdigest()
+
+
 def _sig_diff(a: dict[str, dict], b: dict[str, dict], n: int = 5) -> str:
     """Human-readable first differences between two leaf signatures."""
     lines = []
@@ -111,6 +130,38 @@ class CheckpointManager:
     def latest_step(self) -> Optional[int]:
         steps = self.all_steps()
         return steps[-1] if steps else None
+
+    # ------------------------------------------------------------ verify --
+    def verify(self, step: int) -> bool:
+        """True iff the checkpoint's manifest parses and every shard
+        file listed in it exists with a matching sha256.  Quiet — the
+        fallback helpers do the warning."""
+        d = self._step_dir(step)
+        try:
+            with open(os.path.join(d, "manifest.json")) as f:
+                manifest = json.load(f)
+        except (OSError, json.JSONDecodeError):
+            return False
+        checksums = manifest.get("checksums")
+        if checksums is None:
+            return True                   # pre-checksum checkpoint: trust
+        for name, want in checksums.items():
+            path = os.path.join(d, name)
+            if not os.path.exists(path) or _file_sha256(path) != want:
+                return False
+        return True
+
+    def latest_intact_step(self) -> Optional[int]:
+        """Newest step that passes :meth:`verify`, warning (not
+        raising) past damaged ones — a corrupted final checkpoint costs
+        one save interval, never the run."""
+        for step in reversed(self.all_steps()):
+            if self.verify(step):
+                return step
+            warnings.warn(f"checkpoint step {step} at "
+                          f"{self._step_dir(step)} failed verification "
+                          f"(corrupt or torn write) — falling back")
+        return None
 
     # -------------------------------------------------------------- save --
     def save(self, step: int, state: Any, *, extra: dict | None = None,
@@ -154,13 +205,19 @@ class CheckpointManager:
         for key, leaf in flat.items():
             arrays[key.replace("/", "__")] = np.asarray(jax.device_get(leaf))
         proc = jax.process_index()
-        np.savez(os.path.join(tmp, f"shards_{proc:05d}.npz"), **arrays)
+        shard_name = f"shards_{proc:05d}.npz"
+        np.savez(os.path.join(tmp, shard_name), **arrays)
         manifest = {
             "step": step,
             "time": time.time(),
             "process_count": jax.process_count(),
             "leaves": sig,
             "fingerprint": _sig_fingerprint(sig),
+            # per-shard content checksums, re-verified on restore: a
+            # flipped bit on disk fails loudly instead of loading as a
+            # silently-garbage parameter tree
+            "checksums": {shard_name:
+                          _file_sha256(os.path.join(tmp, shard_name))},
             "config": config,
             "extra": extra or {},
         }
@@ -193,6 +250,18 @@ class CheckpointManager:
         d = self._step_dir(step)
         with open(os.path.join(d, "manifest.json")) as f:
             manifest = json.load(f)
+        for name, want in (manifest.get("checksums") or {}).items():
+            path = os.path.join(d, name)
+            if not os.path.exists(path):
+                raise CheckpointMismatchError(
+                    f"restore: checkpoint step {step} shard {name} is "
+                    f"missing (torn write?)")
+            got = _file_sha256(path)
+            if got != want:
+                raise CheckpointMismatchError(
+                    f"restore: checkpoint step {step} shard {name} "
+                    f"checksum mismatch (sha256 {got[:12]}… != manifest "
+                    f"{want[:12]}…) — on-disk corruption")
         if (config is not None and manifest.get("config") is not None
                 and manifest["config"] != config):
             raise CheckpointMismatchError(
@@ -246,3 +315,18 @@ class CheckpointManager:
                 for p in path)
             ordered.append(leaves_out[key])
         return jax.tree_util.tree_unflatten(treedef, ordered), manifest["extra"]
+
+    def restore_latest(self, like: Any, *, shardings: Any = None,
+                       config: Optional[str] = None):
+        """Restore the newest INTACT checkpoint: a damaged tail
+        checkpoint is warned past (``latest_intact_step``), never
+        fatal.  Returns ``(step, state, extra)``; raises
+        ``FileNotFoundError`` only when NO checkpoint verifies."""
+        step = self.latest_intact_step()
+        if step is None:
+            raise FileNotFoundError(
+                f"restore_latest: no intact checkpoint under "
+                f"{self.directory}")
+        state, extra = self.restore(step, like, shardings=shardings,
+                                    config=config)
+        return step, state, extra

@@ -12,9 +12,19 @@ prefills once and decodes ``--gen`` steps in unison — every slot pays for
 the slowest request.  Both modes share the seeded sampler
 (``--temperature`` / ``--top-k``; greedy stays the default).
 
+Fleet mode (``--engine --replicas N``) fronts N engine replicas with the
+health-routing ``repro.serve.Router`` — least-loaded admission, an
+error-budget circuit breaker per replica, and cross-replica request
+migration.  ``--chaos-seed`` runs the seeded chaos harness (replica
+crash/sick/slow events) against the fleet:
+
+    PYTHONPATH=src python -m repro.launch.serve --arch llama3-8b --smoke \
+        --engine --replicas 2 --requests 16 --chaos-seed 11
+
 Serving-side fault tolerance: the decode loop is stateless beyond the
 cache, so a restart re-prefills in one step; the watchdog flags stuck
-steps (straggler chips in production).
+steps (straggler chips in production); ``--events out.jsonl`` streams
+fault/health/failover events to an append-only JSONL sink.
 """
 from __future__ import annotations
 
@@ -52,19 +62,13 @@ def _kv_banner(cfg, args, s_total: int):
           f"(requested {args.kv_splits}, cache {s_total} slots)")
 
 
-def run_engine(args, cfg, params, mesh=None) -> int:
-    from repro.serve import ServeEngine, supports, synthetic_trace
-
-    if not supports(cfg):
-        print(f"engine: {cfg.arch_id} is not engine-eligible (needs a "
-              f"uniform-window GQA attention cache — MLA/SSM/encoder/"
-              f"global-layer archs serve through the lockstep driver)")
-        return 2
+def _build_engine(args, cfg, params, mesh=None, *, sink=None,
+                  sampler_keys: str = "step"):
+    from repro.serve import ServeEngine
     quant = not args.no_quantize
-    _kv_banner(cfg, args, args.max_len)
     budget = (int(args.mem_budget_mb * 2**20)
               if args.mem_budget_mb else None)
-    engine = ServeEngine(
+    return ServeEngine(
         params, cfg, max_slots=args.max_slots, max_len=args.max_len,
         policy_name=args.policy, quantized=quant,
         kv_backend=args.kv_backend, kv_splits=args.kv_splits,
@@ -74,7 +78,109 @@ def run_engine(args, cfg, params, mesh=None) -> int:
         max_queue=args.max_queue or None,
         deadline_steps=(args.deadline_steps
                         if args.deadline_steps >= 0 else None),
-        max_retries=args.max_retries)
+        max_retries=args.max_retries, sampler_keys=sampler_keys,
+        sink=sink)
+
+
+def _make_trace(args, cfg, engine):
+    from repro.serve import synthetic_trace
+    # size the trace to what the engine can admit: prompts within the
+    # largest bucket, prompt+gen within max_len
+    max_prompt = min(engine.buckets[-1], max(4, args.max_len // 2))
+    return synthetic_trace(
+        args.requests, seed=args.seed, vocab=cfg.vocab,
+        mean_prompt=args.mean_prompt, max_prompt=max_prompt,
+        mean_gen=args.mean_gen, max_gen=max(1, args.max_len - max_prompt),
+        arrival_rate=args.arrival_rate, min_prompt=min(4, max_prompt))
+
+
+def _open_sink(args):
+    if not args.events:
+        return None
+    from repro.events import EventSink
+    print(f"events: streaming to {args.events}")
+    return EventSink(args.events)
+
+
+def run_fleet(args, cfg, params, mesh=None) -> int:
+    """N engine replicas behind the health-routing Router, optionally
+    under the seeded chaos harness."""
+    from repro.serve import (BreakerConfig, FleetFaultInjector, Router,
+                             chaos_plan, supports)
+    if not supports(cfg):
+        print(f"fleet: {cfg.arch_id} is not engine-eligible")
+        return 2
+    _kv_banner(cfg, args, args.max_len)
+    sink = _open_sink(args)
+    engines = []
+    t0 = time.time()
+    for i in range(args.replicas):
+        e = _build_engine(args, cfg, params, mesh, sink=sink,
+                          sampler_keys="request")
+        e.metrics.replica = i
+        e.warmup()
+        engines.append(e)
+    print(f"fleet: {args.replicas} replicas warmed in "
+          f"{time.time()-t0:.1f}s "
+          f"({engines[0].pool.max_slots} slots each)")
+    breaker = BreakerConfig(
+        window_steps=args.breaker_window,
+        degrade_faults=args.breaker_degrade,
+        quarantine_faults=args.breaker_quarantine,
+        cooldown_steps=args.breaker_cooldown,
+        stall_steps=args.breaker_stall)
+    router = Router(engines, policy=args.route, breaker=breaker,
+                    max_migrations=args.max_migrations, sink=sink)
+    if args.chaos_seed >= 0:
+        plan = chaos_plan(args.chaos_seed, steps=max(8, args.requests),
+                          replicas=args.replicas,
+                          n_events=args.chaos_events)
+        FleetFaultInjector(router, plan)
+        print(f"chaos: seed {args.chaos_seed} -> "
+              f"{dict(plan.counts())}")
+    trace = _make_trace(args, cfg, engines[0])
+    t0 = time.time()
+    summary = router.run(trace)
+    wall = time.time() - t0
+    fleet = summary["fleet"]
+    print(f"fleet trace: {args.requests} requests in {wall:.2f}s; "
+          f"health={summary['health']}")
+    print(f"throughput: {summary['tokens_per_s']:.1f} tok/s, goodput "
+          f"{summary['goodput_tokens_per_s']:.1f} tok/s "
+          f"({summary['total_tokens']} tokens)")
+    print(f"failover: {fleet['failovers']} failovers, "
+          f"{fleet['n_migrations']} migrations, replay success "
+          f"{fleet['replay_success_rate']:.2f}, quarantine steps "
+          f"{summary['time_in_quarantine']}")
+    print(f"outcomes: done {fleet['n_done']} dropped {fleet['n_dropped']} "
+          f"cancelled {fleet['n_cancelled']} failed {fleet['n_failed']} "
+          f"rejected {fleet['n_rejected']}")
+    if sink is not None:
+        sink.close()
+    if summary["stalled"]:
+        print("STALLED fleet run")
+        return 1
+    rec = summary["reconcile"]
+    assert rec["ok"], f"fleet ledger does not reconcile: {rec}"
+    for e in engines:
+        assert e.pool.occupancy == 0 and e.pool.allocs == e.pool.frees, \
+            "slot leak"
+    return 0
+
+
+def run_engine(args, cfg, params, mesh=None) -> int:
+    from repro.serve import supports
+
+    if not supports(cfg):
+        print(f"engine: {cfg.arch_id} is not engine-eligible (needs a "
+              f"uniform-window GQA attention cache — MLA/SSM/encoder/"
+              f"global-layer archs serve through the lockstep driver)")
+        return 2
+    _kv_banner(cfg, args, args.max_len)
+    sink = _open_sink(args)
+    budget = (int(args.mem_budget_mb * 2**20)
+              if args.mem_budget_mb else None)
+    engine = _build_engine(args, cfg, params, mesh, sink=sink)
     # one source of truth for capacity: the engine's own clamp/accounting
     if mesh is not None:
         from repro.distributed import sharding as shd
@@ -93,14 +199,7 @@ def run_engine(args, cfg, params, mesh=None) -> int:
     compiles = engine.warmup()
     print(f"warmup: {time.time()-t0:.1f}s, programs={compiles}")
 
-    # size the trace to what the engine can admit: prompts within the
-    # largest bucket, prompt+gen within max_len
-    max_prompt = min(engine.buckets[-1], max(4, args.max_len // 2))
-    trace = synthetic_trace(
-        args.requests, seed=args.seed, vocab=cfg.vocab,
-        mean_prompt=args.mean_prompt, max_prompt=max_prompt,
-        mean_gen=args.mean_gen, max_gen=max(1, args.max_len - max_prompt),
-        arrival_rate=args.arrival_rate, min_prompt=min(4, max_prompt))
+    trace = _make_trace(args, cfg, engine)
     t0 = time.time()
     summary = engine.run(trace)
     wall = time.time() - t0
@@ -129,6 +228,8 @@ def run_engine(args, cfg, params, mesh=None) -> int:
               f"retries {summary['n_retried']}); "
               f"goodput {summary['goodput_tokens_per_s']:.1f} tok/s "
               f"of {summary['tokens_per_s']:.1f}")
+    if sink is not None:
+        sink.close()
     if summary["stalled"]:
         print(f"STALLED: {summary['diagnostics']}")
         return 1
@@ -207,8 +308,10 @@ def run(args):
     if args.engine:
         # single-device mesh adds nothing but sharding plumbing — keep the
         # engine on the exact unsharded path there
-        return run_engine(args, cfg, params,
-                          mesh=mesh if mesh.size > 1 else None)
+        eng_mesh = mesh if mesh.size > 1 else None
+        if args.replicas > 1:
+            return run_fleet(args, cfg, params, mesh=eng_mesh)
+        return run_engine(args, cfg, params, mesh=eng_mesh)
     return run_lockstep(args, cfg, params)
 
 
@@ -263,6 +366,34 @@ def main():
     ap.add_argument("--max-retries", type=int, default=2,
                     help="engine: replay budget per request after a "
                          "detected decode fault")
+    ap.add_argument("--events", default="",
+                    help="append fault/health/failover events to this "
+                         "JSONL file (repro.events.EventSink)")
+    # -- replica fleet (router) --------------------------------------------
+    ap.add_argument("--replicas", type=int, default=1,
+                    help="fleet: engine replicas behind the router "
+                         "(1 = plain single-engine mode)")
+    ap.add_argument("--route", default="least_loaded",
+                    choices=["least_loaded", "round_robin"],
+                    help="fleet: admission routing policy")
+    ap.add_argument("--max-migrations", type=int, default=2,
+                    help="fleet: cross-replica moves per request before "
+                         "it FAILs at fleet level")
+    ap.add_argument("--breaker-window", type=int, default=32,
+                    help="fleet: circuit-breaker fault window (steps)")
+    ap.add_argument("--breaker-degrade", type=int, default=1,
+                    help="fleet: faults in window -> DEGRADED")
+    ap.add_argument("--breaker-quarantine", type=int, default=3,
+                    help="fleet: faults in window -> QUARANTINED")
+    ap.add_argument("--breaker-cooldown", type=int, default=16,
+                    help="fleet: quarantine steps before probation rejoin")
+    ap.add_argument("--breaker-stall", type=int, default=8,
+                    help="fleet: no-progress steps -> QUARANTINED")
+    ap.add_argument("--chaos-seed", type=int, default=-1,
+                    help="fleet: run the seeded chaos harness (replica "
+                         "crash/sick/slow; -1 = off)")
+    ap.add_argument("--chaos-events", type=int, default=3,
+                    help="fleet: chaos events to schedule")
     return run(ap.parse_args())
 
 

@@ -39,6 +39,7 @@ from repro.checkpointing.ckpt import CheckpointManager
 from repro.core.checkpoint import CheckpointConfig
 from repro.core.mixed_precision import LossScale
 from repro.data.synthetic import token_stream
+from repro.events import EventSink
 from repro.launch.mesh import describe, make_mesh_for
 from repro.models import transformer
 from repro.optim import adamw
@@ -192,7 +193,7 @@ def run(args):
     ls = LossScale.init() if tc.use_loss_scale else LossScale.noop()
     start_step, data_state = 0, 0
 
-    latest = mgr.latest_step()
+    latest = mgr.latest_intact_step()
     if latest is not None and not args.fresh:
         state_like = {"params": params, "opt": opt}
         (restored, extra) = mgr.restore(
@@ -226,12 +227,13 @@ def run(args):
                         "arch": cfg.arch_id},
                  config=cfg.arch_id)
 
+    sink = EventSink(args.events) if args.events else None
     guard = None
     if args.guard:
         guard = TrainGuard(GuardConfig(
             window=args.guard_window,
             spike_factor=args.guard_spike_factor,
-            rollback_after=args.guard_rollback_after))
+            rollback_after=args.guard_rollback_after), sink=sink)
         print(f"guard: skip non-finite steps in-jit; loss spike > "
               f"{args.guard_spike_factor}x rolling median; "
               f"{args.guard_rollback_after} consecutive bad steps -> "
@@ -258,7 +260,9 @@ def run(args):
                           f"{args.guard_max_rollbacks} — persistent "
                           f"fault, aborting ({guard.counters()})")
                     return 1
-                latest = mgr.latest_step()
+                # never roll back onto a torn/corrupt checkpoint — fall
+                # back to the newest one whose shard checksums verify
+                latest = mgr.latest_intact_step()
                 if latest is None:
                     print("[guard] rollback with no checkpoint on disk — "
                           "restarting from init")
@@ -312,6 +316,8 @@ def run(args):
         save(args.steps)
     finally:
         wd.close()
+        if sink is not None:
+            sink.close()
         for s, h in zip((signal.SIGTERM, signal.SIGINT), old_handlers):
             signal.signal(s, h)
     if guard is not None:
@@ -373,6 +379,9 @@ def main():
     ap.add_argument("--guard-max-rollbacks", type=int, default=5,
                     help="guard: abort (exit 1) past this many rollbacks "
                          "— a persistent fault, not a transient")
+    ap.add_argument("--events", default=None,
+                    help="append-only JSONL event log (repro.events): "
+                         "guard verdicts stream here for post-mortems")
     return run(ap.parse_args())
 
 

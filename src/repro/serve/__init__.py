@@ -1,23 +1,36 @@
 """Continuous-batching serve engine: slot-pooled int8 KV cache, FCFS
-scheduler, recompile-free join/evict step loop, and the fault-tolerance
-layer (deadlines, cancellation, quarantine + replay).  See README.md in
-this package for the architecture, the static-shape contract, and the
-failure semantics."""
+scheduler, recompile-free join/evict step loop, the fault-tolerance
+layer (deadlines, cancellation, quarantine + replay), and the replica
+fleet (router, health-based failover, cross-replica migration).  See
+README.md in this package for the architecture, the static-shape
+contract, and the failure semantics."""
 from repro.serve.cache_pool import SlotPool, scatter_request
 from repro.serve.engine import ServeEngine, default_buckets, supports
-from repro.serve.faults import FaultEvent, FaultInjector, FaultPlan
-from repro.serve.metrics import ServeMetrics
-from repro.serve.sampling import make_sampler, sample_tokens
+from repro.serve.faults import (FaultEvent, FaultInjector, FaultPlan,
+                                FleetFaultInjector, chaos_plan, poison_slot)
+from repro.serve.metrics import ServeMetrics, fleet_summary
+from repro.serve.router import (ACCEPTING, DEAD, DEGRADED, DRAINED,
+                                DRAINING, HEALTHY, QUARANTINED,
+                                BreakerConfig, FleetRequest, Router,
+                                make_fleet)
+from repro.serve.sampling import (fold_request_key, make_sampler,
+                                  sample_tokens, sample_tokens_per_row)
 from repro.serve.scheduler import (CANCELLED, DECODE, DONE, DROPPED, FAILED,
-                                   PREFILL, QUEUED, TERMINAL,
+                                   MIGRATED, PREFILL, QUEUED, TERMINAL,
                                    AdmissionRejected, Request, Scheduler)
 from repro.serve.trace import TraceRequest, synthetic_trace
 
 __all__ = [
     "ServeEngine", "SlotPool", "Scheduler", "Request", "ServeMetrics",
     "TraceRequest", "synthetic_trace", "scatter_request", "sample_tokens",
+    "sample_tokens_per_row", "fold_request_key",
     "make_sampler", "default_buckets", "supports",
-    "FaultPlan", "FaultEvent", "FaultInjector", "AdmissionRejected",
+    "FaultPlan", "FaultEvent", "FaultInjector", "FleetFaultInjector",
+    "chaos_plan", "poison_slot", "AdmissionRejected",
+    "Router", "BreakerConfig", "FleetRequest", "make_fleet",
+    "fleet_summary",
+    "HEALTHY", "DEGRADED", "QUARANTINED", "DRAINING", "DRAINED", "DEAD",
+    "ACCEPTING",
     "QUEUED", "PREFILL", "DECODE", "DONE",
-    "CANCELLED", "DROPPED", "FAILED", "TERMINAL",
+    "CANCELLED", "DROPPED", "FAILED", "MIGRATED", "TERMINAL",
 ]

@@ -63,9 +63,9 @@ from repro.models.config import ModelConfig
 from repro.serve import sampling
 from repro.serve.cache_pool import SlotPool, scatter_request
 from repro.serve.metrics import ServeMetrics
-from repro.serve.scheduler import (CANCELLED, DECODE, FAILED, QUEUED,
-                                   TERMINAL, AdmissionRejected, Request,
-                                   Scheduler)
+from repro.serve.scheduler import (CANCELLED, DECODE, FAILED, MIGRATED,
+                                   QUEUED, TERMINAL, AdmissionRejected,
+                                   Request, Scheduler)
 from repro.serve.trace import TraceRequest
 
 
@@ -99,7 +99,8 @@ class ServeEngine:
                  mem_budget_bytes: Optional[int] = None, mesh=None,
                  max_queue: Optional[int] = None,
                  deadline_steps: Optional[int] = None,
-                 max_retries: int = 2, retry_backoff_steps: int = 1):
+                 max_retries: int = 2, retry_backoff_steps: int = 1,
+                 sampler_keys: str = "step", sink=None):
         if not supports(cfg):
             raise NotImplementedError(
                 "ServeEngine needs a GQA attention arch with a uniform "
@@ -109,6 +110,17 @@ class ServeEngine:
         if max_retries < 0 or retry_backoff_steps < 0:
             raise ValueError("ServeEngine: max_retries and "
                              "retry_backoff_steps must be >= 0")
+        if sampler_keys not in ("step", "request"):
+            raise ValueError(f"ServeEngine: sampler_keys must be 'step' or "
+                             f"'request', got {sampler_keys!r}")
+        # "step": one key per decode round, folded on a global draw
+        # counter (the PR 5 behavior — deterministic for a fixed engine
+        # but placement-dependent).  "request": every row samples with
+        # fold_in(fold_in(base, key_id), draw) — token `draw` of request
+        # `key_id` gets the same key on any replica/slot/step, which is
+        # what makes fleet migration trajectory-preserving under
+        # sampling (the router's mode).
+        self.sampler_keys = sampler_keys
         self.cfg = cfg
         self.mesh = mesh
         self.max_len = max_len
@@ -149,7 +161,7 @@ class ServeEngine:
             max_slots, bytes_per_slot=self.pool.bytes_per_slot_per_device(),
             byte_budget=mem_budget_bytes,
             max_prefill_per_step=max_prefill_per_step, max_queue=max_queue)
-        self.metrics = ServeMetrics()
+        self.metrics = ServeMetrics(sink=sink)
         self.buckets = tuple(sorted(prompt_buckets
                                     if prompt_buckets is not None
                                     else default_buckets(max_len)))
@@ -158,8 +170,10 @@ class ServeEngine:
                              f"max_len {max_len}")
 
         policy = get_policy(policy_name)
+        self._key = jax.random.PRNGKey(seed)
+        per_req = sampler_keys == "request"
 
-        def _decode(params, cache, tokens, active, key):
+        def _decode_logits(params, cache, tokens, active):
             # sampling is FUSED into the decode program: one dispatch per
             # engine step, and the token/active buffers never round-trip
             # through the host on the steady-state path
@@ -168,8 +182,9 @@ class ServeEngine:
                 params, cfg, cache, tokens, policy=policy,
                 quantized=quantized, kvq_backend=kv_backend,
                 kvq_splits=kv_splits, active=active, mesh=mesh)
-            sampled = sampling.sample_tokens(
-                logits, key, temperature=self.temperature, top_k=self.top_k)
+            return pos_before, logits, cache
+
+        def _verdict(pos_before, logits, sampled, active, tokens):
             # health sentinel, fused into the same program: a live slot is
             # healthy iff its logits are all finite (the padded-vocab mask
             # is a finite -1e30 by design), its sampled token is a real
@@ -186,7 +201,33 @@ class ServeEngine:
                        & (sampled >= 0) & (sampled < cfg.vocab)
                        & (pos_before > 0))
             return jnp.where(active & healthy, sampled,
-                             jnp.where(active, jnp.int32(-1), tokens)), cache
+                             jnp.where(active, jnp.int32(-1), tokens))
+
+        def _decode(params, cache, tokens, active, key):
+            pos_before, logits, cache = _decode_logits(params, cache,
+                                                       tokens, active)
+            sampled = sampling.sample_tokens(
+                logits, key, temperature=self.temperature, top_k=self.top_k)
+            return _verdict(pos_before, logits, sampled, active,
+                            tokens), cache
+
+        base_key = self._key
+
+        def _decode_req(params, cache, tokens, active, kids, draws):
+            # "request" key mode: each row folds its OWN key from the
+            # request identity and per-request draw counter, both living
+            # on device — the draw counter increments inside the same
+            # program, so per-request keys add no host traffic
+            pos_before, logits, cache = _decode_logits(params, cache,
+                                                       tokens, active)
+            keys = jax.vmap(sampling.fold_request_key,
+                            in_axes=(None, 0, 0))(base_key, kids, draws)
+            sampled = sampling.sample_tokens_per_row(
+                logits, keys, temperature=self.temperature,
+                top_k=self.top_k)
+            new_draws = jnp.where(active, draws + 1, draws)
+            return _verdict(pos_before, logits, sampled, active,
+                            tokens), cache, new_draws
 
         def _prefill(bucket, params, tokens, true_len):
             # mesh: _kv_entry pins each cache entry's sharding as it is
@@ -205,6 +246,12 @@ class ServeEngine:
         def _join(tokens, active, slot, tok):
             return tokens.at[slot].set(tok), active.at[slot].set(True)
 
+        def _join_req(tokens, active, kids, draws, slot, tok, kid, draw0):
+            # request-key mode also stamps the row's sampler identity and
+            # its next draw index (len(emitted) + 1 at join time)
+            return (tokens.at[slot].set(tok), active.at[slot].set(True),
+                    kids.at[slot].set(kid), draws.at[slot].set(draw0))
+
         def _leave(active, slot):
             return active.at[slot].set(False)
 
@@ -212,12 +259,18 @@ class ServeEngine:
         # steps and must NOT be donated
         self._rep = None
         if mesh is None:
-            self._decode_fn = jax.jit(_decode, donate_argnums=(1, 2))
+            if per_req:
+                self._decode_fn = jax.jit(_decode_req,
+                                          donate_argnums=(1, 2, 5))
+                self._join_fn = jax.jit(_join_req,
+                                        donate_argnums=(0, 1, 2, 3))
+            else:
+                self._decode_fn = jax.jit(_decode, donate_argnums=(1, 2))
+                self._join_fn = jax.jit(_join, donate_argnums=(0, 1))
             self._scatter_fn = jax.jit(scatter_request, donate_argnums=(0,))
             self._prefill_fns = {
                 b: jax.jit(functools.partial(_prefill, b))
                 for b in self.buckets}
-            self._join_fn = jax.jit(_join, donate_argnums=(0, 1))
             self._leave_fn = jax.jit(_leave, donate_argnums=(0,))
         else:
             # every program pins its shardings explicitly, so the cache's
@@ -234,10 +287,17 @@ class ServeEngine:
                                                quantized=quantized))
             req_shard = shd.to_shardings(
                 mesh, shd.serve_cache_specs(cfg, req_sds, mesh))
-            self._decode_fn = jax.jit(
-                _decode, donate_argnums=(1, 2),
-                in_shardings=(self._p_shard, c_shard, rep, rep, rep),
-                out_shardings=(rep, c_shard))
+            if per_req:
+                self._decode_fn = jax.jit(
+                    _decode_req, donate_argnums=(1, 2, 5),
+                    in_shardings=(self._p_shard, c_shard, rep, rep, rep,
+                                  rep),
+                    out_shardings=(rep, c_shard, rep))
+            else:
+                self._decode_fn = jax.jit(
+                    _decode, donate_argnums=(1, 2),
+                    in_shardings=(self._p_shard, c_shard, rep, rep, rep),
+                    out_shardings=(rep, c_shard))
             self._scatter_fn = jax.jit(
                 scatter_request, donate_argnums=(0,),
                 in_shardings=(c_shard, req_shard, rep, rep),
@@ -250,9 +310,16 @@ class ServeEngine:
             # join/leave must pin shardings too: an unspecified jit would
             # commit tokens/active to one device, and every downstream
             # program keyed on the committed layout would recompile
-            self._join_fn = jax.jit(
-                _join, donate_argnums=(0, 1),
-                in_shardings=(rep, rep, rep, rep), out_shardings=(rep, rep))
+            if per_req:
+                self._join_fn = jax.jit(
+                    _join_req, donate_argnums=(0, 1, 2, 3),
+                    in_shardings=(rep,) * 8,
+                    out_shardings=(rep, rep, rep, rep))
+            else:
+                self._join_fn = jax.jit(
+                    _join, donate_argnums=(0, 1),
+                    in_shardings=(rep, rep, rep, rep),
+                    out_shardings=(rep, rep))
             self._leave_fn = jax.jit(
                 _leave, donate_argnums=(0,),
                 in_shardings=(rep, rep), out_shardings=rep)
@@ -260,7 +327,6 @@ class ServeEngine:
         self._sampler = sampling.make_sampler(temperature=self.temperature,
                                               top_k=self.top_k)
 
-        self._key = jax.random.PRNGKey(seed)
         self._draws = 0
         self._step_no = 0
         self._next_rid = 0
@@ -270,6 +336,8 @@ class ServeEngine:
         self._requests_done: list[Request] = []
         self._tokens_dev = self._replicated(jnp.zeros((max_slots,), jnp.int32))
         self._active_dev = self._replicated(jnp.zeros((max_slots,), bool))
+        self._kids_dev = self._replicated(jnp.zeros((max_slots,), jnp.int32))
+        self._draws_dev = self._replicated(jnp.zeros((max_slots,), jnp.int32))
         self._active_buf = np.zeros((max_slots,), bool)    # host mirror
 
     # -- public API --------------------------------------------------------
@@ -280,14 +348,24 @@ class ServeEngine:
     def submit(self, prompt, max_new_tokens: int,
                eos_id: Optional[int] = None,
                arrival_step: Optional[int] = None,
-               deadline_steps: Optional[int] = None) -> int:
+               deadline_steps: Optional[int] = None,
+               front: bool = False, key_id: Optional[int] = None,
+               emitted: Optional[Sequence[int]] = None) -> int:
         """Queue a request; returns its rid.  FCFS from here on.
 
         Raises :class:`AdmissionRejected` when the bounded queue is full
         (backpressure — the request never entered the system).
         ``deadline_steps`` is a queue TTL in engine steps (None falls
         back to the engine default): a request still queued past it is
-        shed to ``DROPPED`` instead of waiting forever."""
+        shed to ``DROPPED`` instead of waiting forever.  ``front`` joins
+        at the queue HEAD (the router's migration path); ``key_id``
+        overrides the sampler-key identity in ``sampler_keys="request"``
+        mode (the router passes the fleet-global rid); ``emitted`` seeds
+        the already-generated healthy tokens of a request migrating IN
+        from another replica — admission then rides the engine's own
+        replay path (prefill over prompt+emitted, first new draw index
+        = len(emitted)), so the continuation is token-exact under greedy
+        and key-exact in "request" mode."""
         prompt = np.asarray(prompt, np.int32)
         req = Request(rid=self._next_rid, prompt=prompt,
                       max_new_tokens=max_new_tokens,
@@ -296,17 +374,25 @@ class ServeEngine:
                       eos_id=eos_id if eos_id is not None else self.eos_id,
                       deadline_steps=(deadline_steps
                                       if deadline_steps is not None
-                                      else self.deadline_steps))
-        if req.prompt_len > self.buckets[-1]:
+                                      else self.deadline_steps),
+                      key_id=key_id)
+        if emitted:
+            if len(emitted) >= max_new_tokens:
+                raise ValueError(f"request {req.rid}: emitted prefix "
+                                 f"{len(emitted)} leaves no tokens to "
+                                 f"generate (max_new_tokens "
+                                 f"{max_new_tokens})")
+            req.tokens = [int(t) for t in emitted]
+        if req.prompt_len + len(req.tokens) > self.buckets[-1]:
             raise ValueError(f"request {req.rid}: prompt_len "
-                             f"{req.prompt_len} exceeds largest bucket "
-                             f"{self.buckets[-1]}")
+                             f"{req.prompt_len}+{len(req.tokens)} emitted "
+                             f"exceeds largest bucket {self.buckets[-1]}")
         if req.total_len() > self.max_len:
             raise ValueError(f"request {req.rid}: prompt+gen "
                              f"{req.total_len()} exceeds max_len "
                              f"{self.max_len}")
         try:
-            self.scheduler.submit(req)
+            self.scheduler.submit(req, front=front)
         except AdmissionRejected:
             self.metrics.on_reject()
             raise
@@ -315,21 +401,32 @@ class ServeEngine:
         self.metrics.on_submit(req.rid, self._step_no)
         return req.rid
 
-    def cancel(self, rid: int) -> bool:
-        """Cancel a queued or resident request.  Returns True if it was
-        cancelled, False if unknown or already terminal.  A resident
+    def evict_request(self, rid: int,
+                      state: str = MIGRATED) -> Optional[Request]:
+        """Remove a queued or resident request into a terminal state and
+        return it (None if unknown or already terminal).  The router's
+        migration path: the returned request's ``tokens`` are the
+        healthy emitted prefix, which — prepended to the prompt — is the
+        deterministic replay input on another replica.  A resident
         request's slot goes straight back to the pool (its cache bytes
         are dead by contract; the next scatter overwrites them)."""
         req = self._requests.get(rid)
         if req is None or req.state in TERMINAL:
-            return False
+            return None
         if req.state == QUEUED:
-            self.scheduler.cancel_queued(req)
+            self.scheduler.remove_queued(req, state)
         else:
-            self.scheduler.retire(req, state=CANCELLED)
+            self.scheduler.retire(req, state=state)
             self._evict(req)
-        self.metrics.on_terminal(rid, CANCELLED)
-        return True
+        self.metrics.on_terminal(rid, state)
+        return req
+
+    def cancel(self, rid: int) -> bool:
+        """Cancel a queued or resident request.  Returns True if it was
+        cancelled, False if unknown or already terminal (idempotent —
+        cancelling a request that retired in the same step is a safe
+        no-op)."""
+        return self.evict_request(rid, CANCELLED) is not None
 
     def drain(self, *, cancel_queued: bool = True,
               max_steps: Optional[int] = None) -> dict:
@@ -364,6 +461,11 @@ class ServeEngine:
         """Compiled-HLO text of the decode round, at the live buffers'
         exact shapes/shardings — what tests grep to assert the KV cache
         is never all-gathered after warmup."""
+        if self.sampler_keys == "request":
+            return self._decode_fn.lower(
+                self.params, self.pool.cache, self._tokens_dev,
+                self._active_dev, self._kids_dev,
+                self._draws_dev).compile().as_text()
         return self._decode_fn.lower(
             self.params, self.pool.cache, self._tokens_dev,
             self._active_dev, self._key).compile().as_text()
@@ -418,7 +520,8 @@ class ServeEngine:
             byte_budget=self.scheduler.byte_budget,
             max_prefill_per_step=self.scheduler.max_prefill_per_step,
             max_queue=self.scheduler.max_queue)
-        self.metrics = ServeMetrics()
+        self.metrics = ServeMetrics(sink=self.metrics.sink,
+                                    replica=self.metrics.replica)
         self._draws = 0
         self._step_no = 0
         self._next_rid = 0
@@ -430,6 +533,10 @@ class ServeEngine:
             jnp.zeros((self.pool.max_slots,), jnp.int32))
         self._active_dev = self._replicated(
             jnp.zeros((self.pool.max_slots,), bool))
+        self._kids_dev = self._replicated(
+            jnp.zeros((self.pool.max_slots,), jnp.int32))
+        self._draws_dev = self._replicated(
+            jnp.zeros((self.pool.max_slots,), jnp.int32))
         self._active_buf[:] = False
 
     # -- engine internals --------------------------------------------------
@@ -450,6 +557,23 @@ class ServeEngine:
         k = jax.random.fold_in(self._key, self._draws)
         self._draws += 1
         return k
+
+    def _kid(self, req: Request) -> int:
+        """The request's sampler-key identity ("request" mode): the
+        fleet-global id if the router set one, else the local rid."""
+        return req.key_id if req.key_id is not None else req.rid
+
+    def _first_key(self, req: Request):
+        """PRNG key for a request's FIRST token after (re-)prefill.  In
+        "request" mode it folds on the request identity and the emitted
+        count — so a replay's first new token draws the same key it
+        would have drawn on the original placement."""
+        if self.sampler_keys != "request":
+            return self._next_key()
+        if self.temperature <= 0.0:
+            return self._key              # greedy never consumes the key
+        return sampling.fold_request_key(self._key, self._kid(req),
+                                         len(req.tokens))
 
     def _evict(self, req: Request) -> None:
         """Release a resident request's slot + device state (terminal
@@ -545,13 +669,23 @@ class ServeEngine:
                 self.pool.cache = self._scatter_fn(
                     self.pool.cache, req_cache, jnp.int32(slot),
                     jnp.int32(plen))
-            tok = int(np.asarray(self._sampler(logits, self._next_key()))[0])
+            tok = int(np.asarray(self._sampler(logits, self._first_key(req)))[0])
             req.state = DECODE
             req.slot = slot
             self._slot_req[slot] = req
-            self._tokens_dev, self._active_dev = self._join_fn(
-                self._tokens_dev, self._active_dev, jnp.int32(slot),
-                jnp.int32(tok))
+            if self.sampler_keys == "request":
+                # stamp identity + next draw index (the first token drew
+                # at index len(tokens); join runs before _emit appends it)
+                (self._tokens_dev, self._active_dev, self._kids_dev,
+                 self._draws_dev) = self._join_fn(
+                    self._tokens_dev, self._active_dev, self._kids_dev,
+                    self._draws_dev, jnp.int32(slot), jnp.int32(tok),
+                    jnp.int32(self._kid(req)),
+                    jnp.int32(len(req.tokens) + 1))
+            else:
+                self._tokens_dev, self._active_dev = self._join_fn(
+                    self._tokens_dev, self._active_dev, jnp.int32(slot),
+                    jnp.int32(tok))
             self._active_buf[slot] = True
             self._emit(req, tok)          # first token: the TTFT sample
 
@@ -560,9 +694,15 @@ class ServeEngine:
             if hook is not None:
                 hook(self)
             live = np.nonzero(self._active_buf)[0]      # snapshot pre-emit
-            self._tokens_dev, self.pool.cache = self._decode_fn(
-                self.params, self.pool.cache, self._tokens_dev,
-                self._active_dev, self._next_key())
+            if self.sampler_keys == "request":
+                (self._tokens_dev, self.pool.cache,
+                 self._draws_dev) = self._decode_fn(
+                    self.params, self.pool.cache, self._tokens_dev,
+                    self._active_dev, self._kids_dev, self._draws_dev)
+            else:
+                self._tokens_dev, self.pool.cache = self._decode_fn(
+                    self.params, self.pool.cache, self._tokens_dev,
+                    self._active_dev, self._next_key())
             # one host sync, same as the fault-free path: the sentinel
             # verdict is encoded in the token sign (-1 = tripped)
             toks = np.asarray(self._tokens_dev)

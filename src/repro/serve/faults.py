@@ -29,6 +29,24 @@ Fault kinds and what they exercise:
     Call ``engine.cancel(rid)`` at the scheduled step (queued or
     resident) — cancellation storms.
 
+Replica-scoped kinds (ISSUE 8) target a whole fleet member and are fired
+by :class:`FleetFaultInjector` against a ``Router`` (a per-engine
+:class:`FaultInjector` ignores them):
+
+``replica_crash``
+    ``router.kill(replica)`` — the replica dies mid-flight; its queued
+    AND resident requests fail over to the survivors from the router's
+    mirrored token log.
+``replica_sick``
+    Poison one resident slot's cache rows on the replica → its decode
+    sentinel trips → the fault feeds the router's error-budget circuit
+    breaker (HEALTHY → DEGRADED → QUARANTINED as faults accumulate).
+``replica_slow``
+    ``router.pause(replica, duration)`` — the replica stops making
+    progress for ``duration`` router steps; the breaker's stall detector
+    (resident > 0, zero tokens emitted) quarantines it if the pause
+    outlasts ``stall_steps``.
+
 Recovery contract (what the tests assert): the quarantined slot passes a
 pool audit and returns to the free list; the victim replays from prompt
 + already-emitted tokens, so a surviving request's final token stream is
@@ -42,8 +60,11 @@ from collections import Counter
 from typing import Iterable, Optional
 
 import jax.numpy as jnp
+import numpy as np
 
 KINDS = ("nan_logits", "corrupt_row", "drop_scatter", "cancel")
+#: fleet-level kinds, fired by FleetFaultInjector at ROUTER steps
+REPLICA_KINDS = ("replica_crash", "replica_sick", "replica_slow")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -56,15 +77,19 @@ class FaultEvent:
     kind: str
     rid: Optional[int] = None
     slot: Optional[int] = None
+    replica: Optional[int] = None         # fleet kinds: which replica
+    duration: Optional[int] = None        # replica_slow: pause length
 
     def __post_init__(self):
-        if self.kind not in KINDS:
+        if self.kind not in KINDS + REPLICA_KINDS:
             raise ValueError(f"FaultEvent: unknown kind {self.kind!r} "
-                             f"(expected one of {KINDS})")
+                             f"(expected one of {KINDS + REPLICA_KINDS})")
         if self.step < 0:
             raise ValueError("FaultEvent: step must be >= 0")
         if self.kind == "cancel" and self.rid is None:
             raise ValueError("FaultEvent: cancel needs a rid")
+        if self.kind in REPLICA_KINDS and self.replica is None:
+            raise ValueError(f"FaultEvent: {self.kind} needs a replica")
 
 
 class FaultPlan:
@@ -83,9 +108,11 @@ class FaultPlan:
         self.events: list[FaultEvent] = list(events)
 
     def add(self, step: int, kind: str, *, rid: Optional[int] = None,
-            slot: Optional[int] = None) -> "FaultPlan":
+            slot: Optional[int] = None, replica: Optional[int] = None,
+            duration: Optional[int] = None) -> "FaultPlan":
         self.events.append(FaultEvent(step=step, kind=kind, rid=rid,
-                                      slot=slot))
+                                      slot=slot, replica=replica,
+                                      duration=duration))
         return self
 
     def nan_logits(self, step: int, *, rid: Optional[int] = None,
@@ -103,6 +130,18 @@ class FaultPlan:
     def cancel(self, step: int, rid: int) -> "FaultPlan":
         return self.add(step, "cancel", rid=rid)
 
+    def replica_crash(self, step: int, replica: int) -> "FaultPlan":
+        return self.add(step, "replica_crash", replica=replica)
+
+    def replica_sick(self, step: int, replica: int, *,
+                     rid: Optional[int] = None) -> "FaultPlan":
+        return self.add(step, "replica_sick", replica=replica, rid=rid)
+
+    def replica_slow(self, step: int, replica: int, *,
+                     duration: int = 8) -> "FaultPlan":
+        return self.add(step, "replica_slow", replica=replica,
+                        duration=duration)
+
     def at(self, step: int, kind: Optional[str] = None) -> list[FaultEvent]:
         return [e for e in self.events
                 if e.step == step and (kind is None or e.kind == kind)]
@@ -112,6 +151,21 @@ class FaultPlan:
 
     def __len__(self) -> int:
         return len(self.events)
+
+
+def poison_slot(engine, slot: int, value: float) -> None:
+    """Overwrite one slot's cache rows host-side.  Shapes and dtypes
+    are unchanged (``.at[].set`` on the existing leaves), so the
+    donated-buffer decode program is reused as-is — injection cannot
+    recompile anything."""
+    cache = engine.pool.cache
+    names = [n for n in ("k_scale", "v_scale") if n in cache]
+    if not names:                           # unquantized pool: raw K/V rows
+        names = [n for n in ("k", "v") if n in cache]
+    for n in names:
+        # every leaf is (L, B, ...) with the slot axis at B
+        cache[n] = cache[n].at[:, slot].set(
+            jnp.asarray(value, cache[n].dtype))
 
 
 class FaultInjector:
@@ -152,31 +206,17 @@ class FaultInjector:
             return e.slot
         return None
 
-    def _poison(self, slot: int, value: float) -> None:
-        """Overwrite one slot's cache rows host-side.  Shapes and dtypes
-        are unchanged (``.at[].set`` on the existing leaves), so the
-        donated-buffer decode program is reused as-is — injection cannot
-        recompile anything."""
-        cache = self.engine.pool.cache
-        names = [n for n in ("k_scale", "v_scale") if n in cache]
-        if not names:                       # unquantized pool: raw K/V rows
-            names = [n for n in ("k", "v") if n in cache]
-        for n in names:
-            # every leaf is (L, B, ...) with the slot axis at B
-            cache[n] = cache[n].at[:, slot].set(
-                jnp.asarray(value, cache[n].dtype))
-
     def _pre_decode(self, engine) -> None:
         for e in self.plan.at(engine.step_no, "nan_logits"):
             slot = self._resolve_slot(e)
             if slot is not None:
-                self._poison(slot, float("nan"))
+                poison_slot(engine, slot, float("nan"))
                 self.injected["nan_logits"] += 1
                 self.victims.add(engine._slot_req[slot].rid)
         for e in self.plan.at(engine.step_no, "corrupt_row"):
             slot = self._resolve_slot(e)
             if slot is not None:
-                self._poison(slot, 3.4e38)
+                poison_slot(engine, slot, 3.4e38)
                 self.injected["corrupt_row"] += 1
                 self.victims.add(engine._slot_req[slot].rid)
 
@@ -187,3 +227,71 @@ class FaultInjector:
                 self.victims.add(req.rid)
                 return False
         return True
+
+
+class FleetFaultInjector:
+    """Wires a :class:`FaultPlan`'s replica-scoped events into a
+    ``Router``'s ``pre_step`` hook (events fire at ROUTER steps).
+
+    ``injected`` counts events that landed; ``crashed``/``paused``/
+    ``sickened`` record which replicas were hit — the chaos acceptance
+    tests reconcile these against the fleet summary.
+    """
+
+    def __init__(self, router, plan: FaultPlan):
+        self.router = router
+        self.plan = plan
+        self.injected: Counter = Counter()
+        self.crashed: set[int] = set()
+        self.sickened: set[int] = set()
+        self.paused: set[int] = set()
+        router.hooks["pre_step"] = self._pre_step
+
+    def uninstall(self) -> None:
+        self.router.hooks.pop("pre_step", None)
+
+    def _pre_step(self, router) -> None:
+        step = router.step_no
+        for e in self.plan.at(step, "replica_crash"):
+            if router.kill(e.replica):
+                self.injected["replica_crash"] += 1
+                self.crashed.add(e.replica)
+        for e in self.plan.at(step, "replica_sick"):
+            engine = router.engines[e.replica]
+            if router.health[e.replica] == "DEAD":
+                continue
+            # poison one resident slot (rid-targeted if asked, else the
+            # lowest live slot) — the replica's OWN sentinel detects it
+            slot = None
+            if e.rid is not None:
+                req = engine._requests.get(e.rid)
+                slot = req.slot if req is not None else None
+            elif engine._slot_req:
+                slot = min(engine._slot_req)
+            if slot is not None:
+                poison_slot(engine, slot, float("nan"))
+                self.injected["replica_sick"] += 1
+                self.sickened.add(e.replica)
+        for e in self.plan.at(step, "replica_slow"):
+            if router.pause(e.replica, e.duration or 8):
+                self.injected["replica_slow"] += 1
+                self.paused.add(e.replica)
+
+
+def chaos_plan(seed: int, *, steps: int, replicas: int,
+               n_events: int = 4,
+               kinds: tuple = REPLICA_KINDS) -> FaultPlan:
+    """Seeded random replica-fault schedule: the chaos harness.  Same
+    seed -> same plan, so a chaos run is exactly replayable."""
+    rng = np.random.RandomState(seed)
+    plan = FaultPlan()
+    for _ in range(n_events):
+        kind = kinds[int(rng.randint(len(kinds)))]
+        step = int(rng.randint(1, max(2, steps)))
+        replica = int(rng.randint(replicas))
+        if kind == "replica_slow":
+            plan.replica_slow(step, replica,
+                              duration=int(rng.randint(2, 10)))
+        else:
+            plan.add(step, kind, replica=replica)
+    return plan

@@ -13,14 +13,20 @@ dropped, or failed; ``goodput_tokens``/``goodput_tokens_per_s`` count
 only tokens of requests that reached ``DONE`` — the number a client
 actually got value from.  Under faults the gap between the two is the
 cost of the failure paths.
+
+With a ``sink`` (``repro.events.EventSink``) the failure-path counters
+also stream to the append-only JSONL log as they happen — the long-run
+metrics record PR 7 left open.  ``fleet_summary`` is the replica
+aggregation the router uses: per-replica summaries roll up into fleet
+goodput/throughput plus the failover-specific counters.
 """
 from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Optional
+from typing import Optional, Sequence
 
-from repro.serve.scheduler import CANCELLED, DONE, DROPPED, FAILED
+from repro.serve.scheduler import CANCELLED, DONE, DROPPED, FAILED, MIGRATED
 
 
 @dataclasses.dataclass
@@ -55,7 +61,8 @@ def _percentile(xs, q):
 class ServeMetrics:
     """Per-request latency accounting + per-step gauges + fault counters."""
 
-    def __init__(self, clock=time.perf_counter):
+    def __init__(self, clock=time.perf_counter, *, sink=None,
+                 replica: Optional[int] = None):
         self._clock = clock
         self._reqs: dict[int, _ReqStats] = {}
         self._gauges: list[tuple[int, int, int]] = []  # (step, queue, occ)
@@ -64,6 +71,15 @@ class ServeMetrics:
         self.rejected = 0                  # bounded-queue backpressure
         self.faults = 0                    # decode sentinel trips
         self.retries = 0                   # replays scheduled
+        self.tokens_emitted = 0            # running total (stall detector)
+        self.sink = sink                   # optional EventSink (JSONL)
+        self.replica = replica             # fleet: which replica emits
+
+    def _event(self, kind: str, **fields) -> None:
+        if self.sink is not None:
+            if self.replica is not None:
+                fields["replica"] = self.replica
+            self.sink.emit(kind, **fields)
 
     def now(self) -> float:
         return self._clock()
@@ -85,6 +101,7 @@ class ServeMetrics:
             r.itl_n += 1
         r.t_last = t
         r.n_tokens += 1
+        self.tokens_emitted += 1
         self._t_end = t
 
     def on_done(self, rid: int) -> None:
@@ -94,21 +111,25 @@ class ServeMetrics:
 
     def on_terminal(self, rid: int, state: str) -> None:
         """A request left the system without finishing (CANCELLED /
-        DROPPED / FAILED)."""
+        DROPPED / FAILED / MIGRATED)."""
         r = self._reqs[rid]
         r.t_done = self.now()
         r.terminal = state
+        self._event("terminal", rid=rid, state=state, tokens=r.n_tokens)
 
     def on_reject(self) -> None:
         self.rejected += 1
+        self._event("reject")
 
     def on_fault(self, rid: int) -> None:
         self.faults += 1
         self._reqs[rid].faults += 1
+        self._event("fault", rid=rid)
 
     def on_retry(self, rid: int) -> None:
         self.retries += 1
         self._reqs[rid].retries += 1
+        self._event("retry", rid=rid, attempt=self._reqs[rid].retries)
 
     # -- per-step gauges ---------------------------------------------------
     def on_step(self, step: int, queue_depth: int, occupancy: int) -> None:
@@ -128,14 +149,18 @@ class ServeMetrics:
         occ = [o for (_, _, o) in self._gauges]
         by_terminal = {s: sum(1 for r in self._reqs.values()
                               if r.terminal == s)
-                       for s in (CANCELLED, DROPPED, FAILED)}
-        retried = [r for r in self._reqs.values() if r.retries]
+                       for s in (CANCELLED, DROPPED, FAILED, MIGRATED)}
+        # a request migrated off this replica is judged at FLEET level —
+        # it must not count against the local replay success rate
+        retried = [r for r in self._reqs.values()
+                   if r.retries and r.terminal != MIGRATED]
         out = {
             "n_requests": len(self._reqs),
             "n_done": len(done),
             "n_cancelled": by_terminal[CANCELLED],
             "n_dropped": by_terminal[DROPPED],
             "n_failed": by_terminal[FAILED],
+            "n_migrated_out": by_terminal[MIGRATED],
             "n_rejected": self.rejected,
             "n_faults": self.faults,
             "n_retried": self.retries,
@@ -165,3 +190,27 @@ class ServeMetrics:
         if max_slots:
             out["occupancy_frac"] = out["occupancy_mean"] / max_slots
         return out
+
+
+def fleet_summary(replica_summaries: Sequence[dict]) -> dict:
+    """Aggregate per-replica :meth:`ServeMetrics.summary` dicts into the
+    fleet view the router builds on.
+
+    Counts SUM (each locally-terminal request is terminal on exactly one
+    replica; a migrated request is ``n_migrated_out`` on its source and
+    live or terminal on its target, so fleet-level dedup happens in the
+    router's own request table — this helper only rolls up the replica
+    ledgers).  Rates re-derive from the summed tokens and the widest
+    wall-clock span rather than averaging averages."""
+    keys_sum = ("n_requests", "n_done", "n_cancelled", "n_dropped",
+                "n_failed", "n_migrated_out", "n_rejected", "n_faults",
+                "n_retried", "total_tokens", "goodput_tokens", "n_steps")
+    out = {k: sum(s.get(k, 0) for s in replica_summaries) for k in keys_sum}
+    wall = max((s.get("wall_s", 0.0) for s in replica_summaries),
+               default=0.0)
+    out["wall_s"] = wall
+    out["tokens_per_s"] = out["total_tokens"] / wall if wall > 0 else 0.0
+    out["goodput_tokens_per_s"] = (out["goodput_tokens"] / wall
+                                   if wall > 0 else 0.0)
+    out["per_replica"] = list(replica_summaries)
+    return out

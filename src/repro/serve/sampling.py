@@ -31,6 +31,33 @@ def sample_tokens(logits, key=None, *, temperature: float = 0.0,
     return jax.random.categorical(key, scaled, axis=-1).astype(jnp.int32)
 
 
+def sample_tokens_per_row(logits, keys=None, *, temperature: float = 0.0,
+                          top_k: int = 0):
+    """logits: (B, V), keys: (B,) PRNG keys -> (B,) int32, each row
+    sampled with ITS OWN key.
+
+    This is the fleet router's sampling mode: row i's key derives from
+    the request's identity (``fold_in(fold_in(base, key_id), draw)``)
+    rather than the engine step, so the sampled trajectory is a pure
+    function of the request — independent of which replica, slot, or
+    step serves it.  ``temperature <= 0`` is exact greedy (keys unused,
+    identical to :func:`sample_tokens`)."""
+    if temperature <= 0.0:
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    if keys is None:
+        raise ValueError("sample_tokens_per_row: temperature > 0 needs "
+                         "per-row PRNG keys")
+    return jax.vmap(
+        lambda k, row: sample_tokens(row[None], k, temperature=temperature,
+                                     top_k=top_k)[0])(keys, logits)
+
+
+def fold_request_key(base_key, key_id, draw):
+    """The per-request key schedule: token ``draw`` of request
+    ``key_id`` always samples with the same key, wherever it runs."""
+    return jax.random.fold_in(jax.random.fold_in(base_key, key_id), draw)
+
+
 def make_sampler(*, temperature: float = 0.0, top_k: int = 0):
     """A jitted (logits, key) -> tokens closure with static knobs."""
     return jax.jit(lambda logits, key: sample_tokens(

@@ -38,8 +38,11 @@ import numpy as np
 
 QUEUED, PREFILL, DECODE, DONE = "QUEUED", "PREFILL", "DECODE", "DONE"
 CANCELLED, DROPPED, FAILED = "CANCELLED", "DROPPED", "FAILED"
+#: the request left THIS engine for another replica (fleet router); it
+#: is terminal locally — the fleet-level request lives on elsewhere
+MIGRATED = "MIGRATED"
 #: states a request can never leave
-TERMINAL = frozenset({DONE, CANCELLED, DROPPED, FAILED})
+TERMINAL = frozenset({DONE, CANCELLED, DROPPED, FAILED, MIGRATED})
 
 
 class AdmissionRejected(RuntimeError):
@@ -55,6 +58,11 @@ class Request:
     arrival_step: int = 0                 # engine step at which it exists
     eos_id: Optional[int] = None          # per-request EOS override
     deadline_steps: Optional[int] = None  # queue TTL in engine steps
+    # sampler-key identity: the PRNG stream this request draws from in
+    # the engine's "request" key mode.  The fleet router passes the
+    # GLOBAL request id here so a migrated request keeps sampling the
+    # same trajectory on any replica; None falls back to the local rid.
+    key_id: Optional[int] = None
     # -- engine-owned state -----------------------------------------------
     state: str = QUEUED
     slot: Optional[int] = None
@@ -110,10 +118,14 @@ class Scheduler:
         self._resident = 0
         self.admitted = 0
         self.rejected = 0
-        self.terminal_counts = {DONE: 0, CANCELLED: 0, DROPPED: 0, FAILED: 0}
+        self.terminal_counts = {DONE: 0, CANCELLED: 0, DROPPED: 0,
+                                FAILED: 0, MIGRATED: 0}
 
     # ----------------------------------------------------------------------
-    def submit(self, req: Request) -> None:
+    def submit(self, req: Request, *, front: bool = False) -> None:
+        """Queue a request; ``front=True`` joins at the HEAD of the line
+        (the fleet router's migration path — the request already waited
+        its FCFS turn on the replica it left)."""
         if req.state != QUEUED:
             raise ValueError(f"Scheduler.submit: request {req.rid} is "
                              f"{req.state}, expected {QUEUED}")
@@ -122,7 +134,10 @@ class Scheduler:
             raise AdmissionRejected(
                 f"Scheduler: queue full ({len(self._queue)}/{self.max_queue})"
                 f" — request {req.rid} rejected (backpressure)")
-        self._queue.append(req)
+        if front:
+            self._queue.appendleft(req)
+        else:
+            self._queue.append(req)
 
     @property
     def queue_depth(self) -> int:
@@ -161,14 +176,22 @@ class Scheduler:
         self._queue = keep
         return shed
 
+    def remove_queued(self, req: Request, state: str = CANCELLED) -> None:
+        """Remove a still-queued request from the line into a terminal
+        state (``CANCELLED`` by default; the router uses ``MIGRATED``)."""
+        if req.state != QUEUED:
+            raise ValueError(f"Scheduler.remove_queued: request {req.rid} "
+                             f"is {req.state}")
+        if state not in TERMINAL:
+            raise ValueError(f"Scheduler.remove_queued: {state} is not "
+                             f"terminal")
+        self._queue.remove(req)
+        req.state = state
+        self.terminal_counts[state] += 1
+
     def cancel_queued(self, req: Request) -> None:
         """Remove a still-queued request from the line -> ``CANCELLED``."""
-        if req.state != QUEUED:
-            raise ValueError(f"Scheduler.cancel_queued: request {req.rid} "
-                             f"is {req.state}")
-        self._queue.remove(req)
-        req.state = CANCELLED
-        self.terminal_counts[CANCELLED] += 1
+        self.remove_queued(req, CANCELLED)
 
     def pop_admissible(self, free_slots: int, now_step: int) -> list[Request]:
         """FCFS head-of-line admission for this engine step.

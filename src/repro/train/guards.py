@@ -22,6 +22,11 @@ an isolated bad step is **skipped** (logged, excluded from history),
 driver restores the last good checkpoint via ``CheckpointManager`` and
 replays from there (``launch/train.py --guard``).  Healthy steps reset
 the streak.
+
+With a ``sink`` (``repro.events.EventSink``) every non-OK verdict
+streams to the append-only JSONL log as it happens — over a multi-hour
+run the skip/rollback history survives the process (the long-run
+metrics seam PR 7 left open; ``launch/train.py --events`` wires it).
 """
 from __future__ import annotations
 
@@ -55,9 +60,11 @@ class TrainGuard:
 
     OK, SKIP, ROLLBACK = "ok", "skip", "rollback"
 
-    def __init__(self, cfg: GuardConfig = GuardConfig()):
+    def __init__(self, cfg: GuardConfig = GuardConfig(), *, sink=None):
         self.cfg = cfg
+        self.sink = sink                  # optional EventSink (JSONL)
         self._window: deque[float] = deque(maxlen=cfg.window)
+        self._step = 0
         self.bad_streak = 0
         self.nonfinite = 0
         self.spikes = 0
@@ -80,6 +87,7 @@ class TrainGuard:
               * statistics.median(self._window)):
             reason = "spike"
             self.spikes += 1
+        self._step += 1
         if reason is None:
             self._window.append(float(loss))
             self.bad_streak = 0
@@ -88,9 +96,16 @@ class TrainGuard:
         if self.bad_streak >= self.cfg.rollback_after:
             self.rollbacks += 1
             self.bad_streak = 0
+            self._emit("guard_rollback", reason=reason, loss=float(loss))
             return self.ROLLBACK
         self.skipped += 1
+        self._emit("guard_skip", reason=reason, loss=float(loss),
+                   streak=self.bad_streak)
         return self.SKIP
+
+    def _emit(self, kind: str, **fields) -> None:
+        if self.sink is not None:
+            self.sink.emit(kind, guard_step=self._step, **fields)
 
     def reset_history(self) -> None:
         """Forget the loss window + streak — call after a rollback: the

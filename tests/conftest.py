@@ -1,7 +1,66 @@
+"""Shared fixtures + a per-test wall-clock timeout.
+
+The timeout (ISSUE 8 satellite) guards tier-1 against the failure mode
+the fleet work makes possible: a router/engine loop that deadlocks
+instead of failing.  It is SIGALRM-based (no pytest-timeout dependency;
+main-thread only, POSIX only — both true for this suite) and covers
+setup + call of every test.  Override per-run with
+``REPRO_TEST_TIMEOUT_S`` (0 disables; default 300 s — the slowest
+legitimate tests are module-scoped engine warmups well under 120 s).
+"""
+import os
+import signal
+
 import numpy as np
 import pytest
+
+_TIMEOUT_S = int(os.environ.get("REPRO_TEST_TIMEOUT_S", "300"))
+_HAVE_ALARM = hasattr(signal, "SIGALRM")
 
 
 @pytest.fixture(scope="session")
 def rng():
     return np.random.default_rng(0)
+
+
+class _TestTimeout(Exception):
+    pass
+
+
+def _install(item, phase):
+    def _fire(signum, frame):
+        raise _TestTimeout(
+            f"{item.nodeid} exceeded {_TIMEOUT_S}s during {phase} "
+            f"(REPRO_TEST_TIMEOUT_S to adjust; 0 disables)")
+    prev = signal.signal(signal.SIGALRM, _fire)
+    signal.alarm(_TIMEOUT_S)
+    return prev
+
+
+def _uninstall(prev):
+    signal.alarm(0)
+    signal.signal(signal.SIGALRM, prev)
+
+
+@pytest.hookimpl(hookwrapper=True)
+def pytest_runtest_setup(item):
+    if not _HAVE_ALARM or _TIMEOUT_S <= 0:
+        yield
+        return
+    prev = _install(item, "setup")
+    try:
+        yield
+    finally:
+        _uninstall(prev)
+
+
+@pytest.hookimpl(hookwrapper=True)
+def pytest_runtest_call(item):
+    if not _HAVE_ALARM or _TIMEOUT_S <= 0:
+        yield
+        return
+    prev = _install(item, "call")
+    try:
+        yield
+    finally:
+        _uninstall(prev)

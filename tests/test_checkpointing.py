@@ -171,3 +171,84 @@ def test_cross_mesh_resharding_roundtrip(tmp_path):
         for a, b in zip(jax.tree_util.tree_leaves(ref),
                         jax.tree_util.tree_leaves(back)):
             np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+# -- shard checksums + intact-fallback (ISSUE 8) ----------------------------
+def _corrupt_shard(mgr, step):
+    d = mgr._step_dir(step)
+    [shard] = [n for n in os.listdir(d) if n.endswith(".npz")]
+    path = os.path.join(d, shard)
+    with open(path, "r+b") as f:
+        f.seek(20)
+        f.write(b"\xff\xff\xff\xff")
+    return path
+
+
+def test_checksums_in_manifest_and_verify(tmp_ckpt):
+    tmp_ckpt.save(1, _state())
+    d = tmp_ckpt._step_dir(1)
+    with open(os.path.join(d, "manifest.json")) as f:
+        manifest = json.load(f)
+    assert manifest["checksums"], "manifest carries shard checksums"
+    assert tmp_ckpt.verify(1)
+    _corrupt_shard(tmp_ckpt, 1)
+    assert not tmp_ckpt.verify(1)
+
+
+def test_restore_rejects_corrupt_shard(tmp_ckpt):
+    from repro.checkpointing.ckpt import CheckpointMismatchError
+    s = _state()
+    tmp_ckpt.save(1, s)
+    _corrupt_shard(tmp_ckpt, 1)
+    with pytest.raises(CheckpointMismatchError, match="checksum mismatch"):
+        tmp_ckpt.restore(1, jax.tree_util.tree_map(jnp.zeros_like, s))
+
+
+def test_restore_rejects_missing_shard(tmp_ckpt):
+    from repro.checkpointing.ckpt import CheckpointMismatchError
+    s = _state()
+    tmp_ckpt.save(1, s)
+    d = tmp_ckpt._step_dir(1)
+    [shard] = [n for n in os.listdir(d) if n.endswith(".npz")]
+    os.remove(os.path.join(d, shard))
+    with pytest.raises(CheckpointMismatchError, match="missing"):
+        tmp_ckpt.restore(1, jax.tree_util.tree_map(jnp.zeros_like, s))
+
+
+def test_restore_latest_falls_back_past_corruption(tmp_ckpt):
+    s = _state()
+    tmp_ckpt.save(1, s)
+    tmp_ckpt.save(2, _state(seed=2))
+    _corrupt_shard(tmp_ckpt, 2)           # newest checkpoint is damaged
+    with pytest.warns(UserWarning, match="failed verification"):
+        assert tmp_ckpt.latest_intact_step() == 1
+    with pytest.warns(UserWarning, match="falling back"):
+        step, out, _ = tmp_ckpt.restore_latest(
+            jax.tree_util.tree_map(jnp.zeros_like, s))
+    assert step == 1                      # one interval lost, not the run
+    for a, b in zip(jax.tree_util.tree_leaves(s),
+                    jax.tree_util.tree_leaves(out)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    # latest_step (resume-point listing) still sees the damaged one
+    assert tmp_ckpt.latest_step() == 2
+
+
+def test_restore_latest_with_no_intact_checkpoint(tmp_ckpt):
+    tmp_ckpt.save(1, _state())
+    _corrupt_shard(tmp_ckpt, 1)
+    with pytest.warns(UserWarning, match="failed verification"):
+        with pytest.raises(FileNotFoundError, match="no intact"):
+            tmp_ckpt.restore_latest(
+                jax.tree_util.tree_map(jnp.zeros_like, _state()))
+
+
+def test_pre_checksum_checkpoints_still_verify(tmp_ckpt):
+    tmp_ckpt.save(1, _state())
+    d = tmp_ckpt._step_dir(1)
+    with open(os.path.join(d, "manifest.json")) as f:
+        manifest = json.load(f)
+    del manifest["checksums"]             # an older-format checkpoint
+    with open(os.path.join(d, "manifest.json"), "w") as f:
+        json.dump(manifest, f)
+    assert tmp_ckpt.verify(1)             # trusted, not rejected
+    assert tmp_ckpt.latest_intact_step() == 1

@@ -1,0 +1,112 @@
+"""Append-only JSONL event sink (ISSUE 8 satellite): ordering, crash
+tolerance, and the three producers — train guards, serve metrics, and
+the fleet router (router emission is covered in test_router.py)."""
+from __future__ import annotations
+
+import json
+
+import pytest
+
+from repro.events import EventSink, read_events
+from repro.serve.metrics import ServeMetrics
+from repro.train.guards import GuardConfig, TrainGuard
+
+
+def test_emit_seq_and_filter(tmp_path):
+    path = str(tmp_path / "ev.jsonl")
+    with EventSink(path, clock=lambda: 12.5) as sink:
+        sink.emit("a", x=1)
+        sink.emit("b")
+        sink.emit("a", x=2)
+        assert sink.emitted == 3
+    evs = read_events(path)
+    assert [e["seq"] for e in evs] == [0, 1, 2]
+    assert all(e["t"] == 12.5 for e in evs)
+    assert [e["x"] for e in read_events(path, "a")] == [1, 2]
+
+
+def test_append_only_across_sinks(tmp_path):
+    """Two sink sessions on one path append — a restart keeps history."""
+    path = str(tmp_path / "ev.jsonl")
+    with EventSink(path) as s:
+        s.emit("run", n=1)
+    with EventSink(path) as s:
+        s.emit("run", n=2)
+    assert [e["n"] for e in read_events(path, "run")] == [1, 2]
+
+
+def test_truncated_final_line_skipped_with_warning(tmp_path):
+    path = str(tmp_path / "ev.jsonl")
+    with EventSink(path) as s:
+        s.emit("ok")
+    with open(path, "a") as f:
+        f.write('{"seq": 1, "kind": "torn')          # crash mid-write
+    with pytest.warns(UserWarning, match="truncated"):
+        evs = read_events(path)
+    assert len(evs) == 1 and evs[0]["kind"] == "ok"
+
+
+def test_flush_every_batches(tmp_path):
+    path = str(tmp_path / "ev.jsonl")
+    sink = EventSink(path, flush_every=3)
+    sink.emit("a"), sink.emit("a")
+    sink.close()                          # close flushes the tail
+    assert len(read_events(path)) == 2
+
+
+def test_closed_sink_raises(tmp_path):
+    sink = EventSink(str(tmp_path / "ev.jsonl"))
+    sink.close()
+    with pytest.raises(RuntimeError, match="closed"):
+        sink.emit("late")
+
+
+def test_guard_streams_verdicts(tmp_path):
+    path = str(tmp_path / "guard.jsonl")
+    with EventSink(path) as sink:
+        g = TrainGuard(GuardConfig(min_history=2, rollback_after=2),
+                       sink=sink)
+        for loss in (1.0, 1.1, 1.05):
+            assert g.observe(loss) == g.OK
+        assert g.observe(float("nan")) == g.SKIP
+        assert g.observe(99.0) == g.ROLLBACK       # second bad in streak
+    skips = read_events(path, "guard_skip")
+    assert len(skips) == 1 and skips[0]["reason"] == "nonfinite"
+    rb = read_events(path, "guard_rollback")
+    assert len(rb) == 1 and rb[0]["reason"] == "spike"
+    assert all("guard_step" in e for e in skips + rb)
+
+
+def test_serve_metrics_stream_failure_counters(tmp_path):
+    path = str(tmp_path / "serve.jsonl")
+    with EventSink(path) as sink:
+        m = ServeMetrics(sink=sink, replica=1)
+        m.on_submit(0, 0)
+        m.on_fault(0)
+        m.on_retry(0)
+        m.on_reject()
+        m.on_terminal(0, "FAILED")
+    kinds = [e["kind"] for e in read_events(path)]
+    assert kinds == ["fault", "retry", "reject", "terminal"]
+    # every event is replica-tagged for fleet-level attribution
+    assert all(e["replica"] == 1 for e in read_events(path))
+    term = read_events(path, "terminal")[0]
+    assert term["rid"] == 0 and term["state"] == "FAILED"
+
+
+def test_shared_sink_interleaves_producers(tmp_path):
+    """A router and its replicas' metrics share ONE sink; seq orders
+    the interleaved stream deterministically."""
+    path = str(tmp_path / "shared.jsonl")
+    with EventSink(path) as sink:
+        g = TrainGuard(GuardConfig(rollback_after=2), sink=sink)
+        m = ServeMetrics(sink=sink, replica=0)
+        g.observe(float("inf"))
+        m.on_reject()
+        g.observe(float("inf"))
+    evs = read_events(path)
+    assert [e["kind"] for e in evs] == ["guard_skip", "reject",
+                                       "guard_rollback"]
+    assert [e["seq"] for e in evs] == [0, 1, 2]
+    raw = [json.loads(line) for line in open(path)]
+    assert len(raw) == 3

@@ -382,6 +382,72 @@ class TestEngineFaultRecovery:
 
 
 # ---------------------------------------------------------------------------
+class TestCancelRetireRaces:
+    """ISSUE 8 satellite: cancellation racing same-step retirement, and
+    drain() called twice — both must be idempotent no-ops with
+    reconciled counts."""
+
+    def test_cancel_after_same_step_retirement(self, engine):
+        [p] = _prompts(1)
+        rid = engine.submit(p, 1)         # retires on its FIRST token
+        engine.step()
+        assert engine._requests[rid].state == DONE
+        # the racing cancel arrives after retirement: safe no-op
+        assert engine.cancel(rid) is False
+        assert engine.cancel(rid) is False          # and again
+        s = engine.summary()
+        assert s["n_done"] == 1 and s["n_cancelled"] == 0
+        assert engine.pool.allocs == engine.pool.frees
+
+    def test_cancel_storm_every_step_reconciles(self, engine):
+        """Cancel each rid at every step (most attempts race a request
+        that is already terminal) — exactly one terminal state each."""
+        rids = [engine.submit(p, 2) for p in _prompts(4, seed=11)]
+        cancelled = set()
+        guard = 100
+        while engine.scheduler.has_work() and guard:
+            for r in rids:
+                if engine.cancel(r):
+                    cancelled.add(r)
+            engine.step()
+            guard -= 1
+        assert guard
+        s = engine.summary()
+        assert s["n_done"] + s["n_cancelled"] == len(rids)
+        assert s["n_cancelled"] == len(cancelled)
+        assert engine.pool.occupancy == 0
+        assert engine.pool.allocs == engine.pool.frees
+
+    def test_drain_twice_is_idempotent(self, engine):
+        rids = [engine.submit(p, 4) for p in _prompts(3, seed=12)]
+        engine.step()
+        s1 = engine.drain()
+        s2 = engine.drain()               # nothing left: same ledger
+        for k in ("n_requests", "n_done", "n_cancelled", "n_dropped",
+                  "n_failed", "total_tokens"):
+            assert s1[k] == s2[k], k
+        assert s2["n_done"] + s2["n_cancelled"] == len(rids)
+        assert engine.scheduler.resident == 0
+        assert engine.pool.occupancy == 0
+        assert engine.pool.allocs == engine.pool.frees
+
+    def test_evict_request_migrated_ledger(self, engine):
+        """The router's eviction path: a resident request leaves as
+        MIGRATED with its healthy tokens intact and no slot leak."""
+        from repro.serve import MIGRATED
+        [p] = _prompts(1, seed=13)
+        rid = engine.submit(p, 6)
+        engine.step(), engine.step()
+        req = engine.evict_request(rid)
+        assert req is not None and req.state == MIGRATED
+        assert len(req.tokens) >= 1       # the replay prefix
+        assert engine.evict_request(rid) is None    # idempotent
+        s = engine.summary()
+        assert s["n_migrated_out"] == 1 and s["n_done"] == 0
+        assert engine.pool.allocs == engine.pool.frees
+
+
+# ---------------------------------------------------------------------------
 class TestTrainGuard:
     def test_config_validation(self):
         with pytest.raises(ValueError, match="spike_factor"):

@@ -1,0 +1,382 @@
+"""Replica fleet (ISSUE 8): router admission, the error-budget circuit
+breaker, cross-replica migration, crash failover, elastic drain/rejoin,
+fleet metrics reconciliation, and the event sink.
+
+The chaos acceptance scenario: a seeded trace over 2 replicas with one
+replica killed mid-flight — every non-cancelled request still completes,
+migrated requests' greedy tokens exactly match a fault-free
+single-engine run, both slot pools audit to zero leaks, the fleet
+summary reconciles against the trace + fault plan, and the surviving
+replica's jit program cache stays frozen.
+"""
+from __future__ import annotations
+
+import jax
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.events import EventSink, read_events
+from repro.models import transformer
+from repro.serve import (DEAD, DEGRADED, DONE, DRAINED, DRAINING, FAILED,
+                         HEALTHY, QUARANTINED, AdmissionRejected,
+                         BreakerConfig, FaultPlan, FleetFaultInjector,
+                         Router, ServeEngine, TraceRequest, chaos_plan)
+
+
+def _smoke_cfg():
+    return configs.smoke_config("llama3-8b")
+
+
+@pytest.fixture(scope="module")
+def llama():
+    cfg = _smoke_cfg()
+    return cfg, transformer.init_params(cfg, jax.random.PRNGKey(0))
+
+
+@pytest.fixture(scope="module")
+def engines_mod(llama):
+    """Two warmed greedy replicas in per-request key mode (identical
+    construction — same base seed, as a fleet deployment would)."""
+    cfg, params = llama
+    out = []
+    for _ in range(2):
+        e = ServeEngine(params, cfg, max_slots=3, max_len=32,
+                        max_retries=2, sampler_keys="request")
+        e.warmup()
+        out.append(e)
+    return out
+
+
+def _reset(engines):
+    for e in engines:
+        e.reset()
+        e.hooks.clear()
+        e.deadline_steps = None
+        e.max_retries = 2
+        e.retry_backoff_steps = 1
+        e.scheduler.max_queue = None
+    return engines
+
+
+@pytest.fixture
+def fleet(engines_mod):
+    """Fresh Router over the shared warmed replicas."""
+    return Router(_reset(engines_mod))
+
+
+def _prompts(n, seed=0, lo=4, hi=10):
+    rng = np.random.default_rng(seed)
+    vocab = _smoke_cfg().vocab
+    return [rng.integers(1, vocab, size=int(rng.integers(lo, hi)))
+            .astype(np.int32) for _ in range(n)]
+
+
+def _trace(n=8, seed=7, spread=6, max_new=(4, 8)):
+    rng = np.random.default_rng(seed)
+    return [TraceRequest(arrival_step=int(rng.integers(0, spread + 1)),
+                         prompt=p,
+                         max_new_tokens=int(rng.integers(*max_new)))
+            for p in _prompts(n, seed=seed)]
+
+
+def _drive(router, guard=600):
+    while router.live_requests() > 0 and guard:
+        router.step()
+        guard -= 1
+    assert guard, "fleet failed to drain"
+
+
+# ---------------------------------------------------------------------------
+class TestBreakerConfig:
+    def test_validation(self):
+        with pytest.raises(ValueError, match="window"):
+            BreakerConfig(window_steps=0)
+        with pytest.raises(ValueError, match="degrade_faults"):
+            BreakerConfig(degrade_faults=5, quarantine_faults=3)
+
+    def test_router_validation(self, engines_mod):
+        engines = _reset(engines_mod)
+        with pytest.raises(ValueError, match="policy"):
+            Router(engines, policy="random")
+        with pytest.raises(ValueError, match="at least one"):
+            Router([])
+
+
+class TestRouting:
+    def test_least_loaded_spreads_with_index_tiebreak(self, fleet):
+        gids = [fleet.submit(p, 2) for p in _prompts(4)]
+        placements = [fleet.request(g).placements[0][0] for g in gids]
+        # empty fleet: tie broken by index -> 0 first, then the less
+        # loaded 1, alternating as queues balance
+        assert placements == [0, 1, 0, 1]
+        _drive(fleet)
+        assert all(fleet.request(g).state == DONE for g in gids)
+
+    def test_round_robin_rotates(self, engines_mod):
+        router = Router(_reset(engines_mod), policy="round_robin")
+        gids = [router.submit(p, 2) for p in _prompts(4)]
+        assert [router.request(g).placements[0][0] for g in gids] \
+            == [0, 1, 0, 1]
+        _drive(router)
+
+    def test_fleet_backpressure_when_all_reject(self, fleet):
+        for e in fleet.engines:
+            e.scheduler.max_queue = 1
+        for p in _prompts(2):
+            fleet.submit(p, 2)            # one queued per replica
+        with pytest.raises(AdmissionRejected, match="fleet backpressure"):
+            fleet.submit(_prompts(1)[0], 2)
+        assert fleet.rejected == 1
+        assert fleet.summary()["fleet"]["n_rejected"] == 1
+        _drive(fleet)
+
+    def test_fleet_cancel_is_idempotent(self, fleet):
+        [p] = _prompts(1)
+        gid = fleet.submit(p, 6)
+        assert fleet.cancel(gid) and not fleet.cancel(gid)
+        _drive(fleet)
+        assert fleet.summary()["fleet"]["n_cancelled"] == 1
+
+
+class TestBreaker:
+    def test_sick_replica_degrades_quarantines_and_rejoins(self, engines_mod):
+        b = BreakerConfig(window_steps=6, degrade_faults=1,
+                          quarantine_faults=2, cooldown_steps=3,
+                          stall_steps=50)
+        router = Router(_reset(engines_mod), breaker=b)
+        # long request pinned to replica 0, repeatedly poisoned there
+        [p] = _prompts(1)
+        gid = fleet_gid = router.submit(p, 8)
+        assert router.request(gid).placements[0][0] == 0
+        # poison replica 0 whenever the victim is resident (events that
+        # catch it queued in retry backoff land nowhere) — at least two
+        # land inside the 6-step window, tripping the quarantine budget
+        plan = FaultPlan()
+        for s in (2, 4, 5, 6, 7):
+            plan.replica_sick(s, 0)
+        inj = FleetFaultInjector(router, plan)
+        seen = set()
+        for _ in range(40):
+            router.step()
+            seen.add(router.health[0])
+            if router.live_requests() == 0 and QUARANTINED in seen:
+                break
+        _drive(router)
+        assert {DEGRADED, QUARANTINED} <= seen
+        for _ in range(b.cooldown_steps + b.window_steps + 1):
+            router.step()                 # idle steps age the breaker
+        # cooldown rejoined it (probation first, HEALTHY once clean)
+        assert router.health[0] in (DEGRADED, HEALTHY)
+        assert router.time_in_quarantine[0] >= b.cooldown_steps
+        # the victim migrated to replica 1 and still finished
+        fr = router.request(fleet_gid)
+        assert fr.state == DONE and fr.migrations >= 1
+        assert inj.injected["replica_sick"] >= 1
+        assert router.summary()["reconcile"]["ok"]
+
+    def test_stalled_replica_quarantined(self, engines_mod):
+        b = BreakerConfig(window_steps=8, quarantine_faults=3,
+                          cooldown_steps=4, stall_steps=3)
+        router = Router(_reset(engines_mod), breaker=b)
+        gid = router.submit(_prompts(1)[0], 6)
+        router.step()                     # request resident on replica 0
+        assert router.pause(0, 10)
+        for _ in range(b.stall_steps + 1):
+            router.step()
+        assert router.health[0] == QUARANTINED
+        _drive(router)
+        fr = router.request(gid)
+        assert fr.state == DONE and fr.migrations == 1
+        assert fr.placements[-1][0] == 1  # finished on the survivor
+
+
+class TestDrainRejoin:
+    def test_drain_migrates_queued_lets_residents_finish(self, fleet):
+        counts0 = fleet.engines[0].compile_counts()
+        gids = [fleet.submit(p, 5) for p in _prompts(6, seed=3)]
+        fleet.step()                      # some resident, some queued
+        fleet.drain_replica(0)
+        assert fleet.health[0] == DRAINING
+        _drive(fleet)
+        assert fleet.health[0] == DRAINED
+        assert all(fleet.request(g).state == DONE for g in gids)
+        # elastic rejoin: back in rotation, ZERO recompiles
+        fleet.rejoin(0)
+        assert fleet.health[0] == HEALTHY
+        g2 = fleet.submit(_prompts(1, seed=9)[0], 3)
+        _drive(fleet)
+        assert fleet.request(g2).state == DONE
+        assert fleet.engines[0].compile_counts() == counts0
+
+    def test_rejoin_rejects_wrong_state(self, fleet):
+        with pytest.raises(ValueError, match="DRAINED"):
+            fleet.rejoin(0)               # HEALTHY, nothing to rejoin
+
+    def test_drain_twice_is_idempotent(self, fleet):
+        gid = fleet.submit(_prompts(1)[0], 3)
+        fleet.drain_replica(0)
+        fleet.drain_replica(0)            # no-op, no double-migrate
+        _drive(fleet)
+        assert fleet.request(gid).state == DONE
+        assert fleet.summary()["reconcile"]["ok"]
+
+
+class TestMigrationBudget:
+    def test_exhausted_budget_fails_at_fleet_level(self, engines_mod):
+        router = Router(_reset(engines_mod), max_migrations=0)
+        gid = router.submit(_prompts(1)[0], 8)
+        router.step()
+        assert router.kill(router.request(gid).placements[0][0])
+        assert router.request(gid).state == FAILED
+        assert router.summary()["fleet"]["n_failed"] == 1
+
+    def test_kill_is_idempotent(self, fleet):
+        assert fleet.kill(0)
+        assert not fleet.kill(0)
+        assert fleet.health[0] == DEAD
+
+
+class TestChaosAcceptance:
+    """The ISSUE 8 acceptance scenario (see module docstring)."""
+
+    def test_replica_kill_mid_trace(self, engines_mod):
+        engines = _reset(engines_mod)
+        trace = _trace(n=8, seed=7)
+        # fault-free reference: the same trace on ONE engine (greedy
+        # decode is placement-independent, so this is the ground truth
+        # token stream for every request)
+        ref_sum = engines[0].run(trace)
+        assert ref_sum["n_done"] == len(trace)
+        ref = {r.rid: list(r.tokens) for r in engines[0]._requests_done}
+        _reset(engines)
+
+        router = Router(engines, breaker=BreakerConfig(window_steps=8))
+        plan = FaultPlan().replica_crash(4, 1)
+        inj = FleetFaultInjector(router, plan)
+        counts0 = engines[0].compile_counts()
+        summ = router.run(trace)
+
+        assert inj.injected["replica_crash"] == 1
+        assert not summ["stalled"]
+        # every non-cancelled request completed, token-exact vs the
+        # fault-free run (trace submit order == gid order == ref rid)
+        assert summ["fleet"]["n_done"] == len(trace)
+        order = sorted(range(len(trace)),
+                       key=lambda i: trace[i].arrival_step)
+        for gid in range(len(trace)):
+            fr = router.request(gid)
+            assert fr.state == DONE
+            assert fr.tokens == ref[gid], \
+                f"gid {gid} diverged after failover"
+        # the kill actually moved work (replica 1 had live requests)
+        assert summ["fleet"]["failovers"] >= 1
+        assert summ["fleet"]["n_migrated_requests"] >= 1
+        assert summ["fleet"]["replay_success_rate"] == 1.0
+        # zero slot leaks on BOTH replicas — including the dead one,
+        # whose ledger was closed out by the crash harvest
+        for e in engines:
+            assert e.pool.allocs == e.pool.frees
+            assert e.pool.occupancy == 0
+            e.pool.audit()
+        # ledger reconciliation: fleet table vs every replica ledger
+        rec = summ["reconcile"]
+        assert rec["ok"], rec
+        assert rec["placements"] == len(trace) + summ["fleet"]["n_migrations"]
+        # goodput accounting: every request's full stream counted once
+        assert summ["fleet"]["goodput_tokens"] == \
+            sum(len(ref[g]) for g in range(len(trace)))
+        # frozen program cache on the survivor: failover replays ride
+        # the same compiled prefill/decode programs
+        assert engines[0].compile_counts() == counts0
+        assert router.health[1] == DEAD and len(order) == len(trace)
+
+    def test_seeded_chaos_plan_is_replayable(self):
+        p1 = chaos_plan(11, steps=20, replicas=2, n_events=5)
+        p2 = chaos_plan(11, steps=20, replicas=2, n_events=5)
+        assert [vars(a) for a in p1.events] == [vars(b) for b in p2.events]
+        p3 = chaos_plan(12, steps=20, replicas=2, n_events=5)
+        assert [vars(a) for a in p1.events] != [vars(b) for b in p3.events]
+
+
+class TestPlacementIndependentSampling:
+    """sampler_keys="request": a request's sampled trajectory is a pure
+    function of (base seed, key_id, draw index) — independent of the
+    slot, step, co-tenants, or replica that serve it."""
+
+    @pytest.fixture(scope="class")
+    def sampled_engines(self, llama):
+        cfg, params = llama
+        out = []
+        for _ in range(2):
+            e = ServeEngine(params, cfg, max_slots=3, max_len=32,
+                            temperature=0.7, top_k=8, seed=13,
+                            max_retries=2, sampler_keys="request")
+            e.warmup()
+            out.append(e)
+        return out
+
+    def test_trajectory_ignores_slot_step_and_cotenants(self,
+                                                        sampled_engines):
+        eng = _reset(sampled_engines)[0]
+        [p] = _prompts(1, seed=5)
+        eng.submit(p, 6, key_id=100)      # alone, slot 0, step 0
+        while eng.scheduler.has_work():
+            eng.step()
+        ref = list(eng._requests_done[0].tokens)
+        eng.reset()
+        for q in _prompts(3, seed=6):     # crowd the pool first
+            eng.submit(q, 5)
+        for _ in range(4):
+            eng.step()
+        eng.submit(p, 6, key_id=100)      # later step, different slot
+        while eng.scheduler.has_work():
+            eng.step()
+        got = next(list(r.tokens) for r in eng._requests_done
+                   if r.key_id == 100)
+        assert got == ref
+
+    def test_migration_preserves_sampled_trajectory(self, sampled_engines):
+        engines = _reset(sampled_engines)
+        trace = _trace(n=6, seed=21, max_new=(5, 9))
+        # fault-free single-engine reference: local rids == fleet gids
+        # (same submit order), and key_id defaults to the rid — so the
+        # per-request key streams match the fleet run exactly
+        engines[0].run(trace)
+        ref = {r.rid: list(r.tokens) for r in engines[0]._requests_done}
+        assert len(ref) == len(trace)
+        _reset(engines)
+
+        router = Router(engines)
+        inj = FleetFaultInjector(router, FaultPlan().replica_crash(3, 0))
+        summ = router.run(trace)
+        assert inj.injected["replica_crash"] == 1
+        assert summ["fleet"]["n_done"] == len(trace)
+        assert summ["fleet"]["n_migrated_requests"] >= 1
+        for gid in range(len(trace)):
+            fr = router.request(gid)
+            assert fr.state == DONE
+            assert fr.tokens == ref[gid], \
+                f"sampled gid {gid} diverged after failover"
+        assert summ["reconcile"]["ok"]
+
+
+class TestEvents:
+    def test_router_streams_health_and_failover_events(self, engines_mod,
+                                                       tmp_path):
+        path = str(tmp_path / "fleet.jsonl")
+        with EventSink(path) as sink:
+            router = Router(_reset(engines_mod), sink=sink)
+            gid = router.submit(_prompts(1)[0], 6)
+            router.step()
+            router.kill(router.request(gid).placements[0][0])
+            _drive(router)
+        health = read_events(path, "health")
+        assert any(e["to"] == DEAD for e in health)
+        fail = read_events(path, "failover")
+        assert fail and fail[0]["gid"] == gid
+        places = read_events(path, "place")
+        assert len(places) == 2           # initial + failover placement
+        assert places[1]["front"] and places[1]["emitted"] >= 1
+        done = read_events(path, "fleet_terminal")
+        assert any(e["state"] == DONE and e["gid"] == gid for e in done)

@@ -49,7 +49,7 @@ import xml.etree.ElementTree as ET
 # more (7 mesh + the cross-mesh checkpoint round-trip); the lock stays
 # at the 1-device floor so the suite passes anywhere.
 MAX_FAILED = 0
-MIN_PASSED = 451
+MIN_PASSED = 495
 
 # Benchmark floors (path into the committed BENCH json, minimum value or
 # required flag).  Floors sit safely under the committed results so normal
@@ -58,12 +58,17 @@ MIN_PASSED = 451
 # sharding losing parity) trips them.
 BENCH_FLOORS = [
     # serve engine: continuous batching must keep a real throughput win
-    # over lockstep.  PR 7 re-based this floor: the bench now times both
-    # sides best-of-3 at steady state (the old single-shot timing charged
-    # lockstep its cold-start costs and inflated the win to 1.55x);
-    # honest steady-state is ~1.2-1.3x on the smoke trace (committed:
-    # 1.21x)
-    ("BENCH_serve.json", ("speedup_tokens_per_s",), 1.1),
+    # over lockstep.  PR 7 re-based 1.55x -> 1.1 (single-shot timing had
+    # charged lockstep its cold start); PR 8 re-based again to 1.0: both
+    # walls are ~50 ms on CPU and lockstep's is bimodal ACROSS processes
+    # (observed 1.03x-1.34x over repeated interleaved best-of-5 runs), so
+    # any floor above parity flakes on regeneration.  The structural win
+    # is ratcheted deterministically below via slot_step_efficiency
+    # (useful tokens per executed slot-step on the seeded trace, arrival
+    # gaps included: engine 0.764 vs lockstep's 0.57 — no wall clock
+    # involved, exact on the seeded trace).
+    ("BENCH_serve.json", ("speedup_tokens_per_s",), 1.0),
+    ("BENCH_serve.json", ("continuous", "slot_step_efficiency"), 0.75),
     # fault tolerance (ISSUE 7): under the canonical seeded fault plan
     # (NaN logits + corrupt cache row + dropped scatter) the engine must
     # recover every victim (no slot leaks, every retry reaches DONE) and
@@ -73,6 +78,18 @@ BENCH_FLOORS = [
     ("BENCH_serve.json", ("fault_trace", "goodput_tokens_per_s"), 3000),
     ("BENCH_serve.json", ("fault_trace", "goodput_frac_of_fault_free"),
      0.55),
+    # replica fleet (ISSUE 8): under the canonical seeded replica-kill
+    # (2 replicas, replica 1 crashed at router step 4) every migrated
+    # request must replay to DONE on the survivor, neither pool may leak,
+    # and fleet goodput must hold at least half the fault-free fleet's
+    # (committed: replay 1.0, ratio ~1.0 — the survivor's steps cost less
+    # than stepping two engines on CPU)
+    ("BENCH_serve.json", ("fleet", "replica_kill", "zero_slot_leaks"),
+     True),
+    ("BENCH_serve.json",
+     ("fleet", "replica_kill", "failover_replay_success"), 0.99),
+    ("BENCH_serve.json",
+     ("fleet", "replica_kill", "goodput_frac_of_fault_free"), 0.5),
     # split-K int8 decode: ragged-batch tile claw-back (committed: 0.75)
     ("BENCH_decode.json", ("tile_clawback_s2048_ragged", "skip_frac"), 0.70),
     # sparse flash grids (committed: 0.47 causal, 0.82 windowed)
