@@ -25,6 +25,17 @@ Serving-side fault tolerance: the decode loop is stateless beyond the
 cache, so a restart re-prefills in one step; the watchdog flags stuck
 steps (straggler chips in production); ``--events out.jsonl`` streams
 fault/health/failover events to an append-only JSONL sink.
+
+Durability (``--journal wal.jsonl``): every fleet request transition is
+written ahead to an fsync'd journal; after a whole-process crash,
+re-running with ``--recover`` rebuilds the fleet from the journal and
+finishes every in-flight request from its durable prompt + token
+prefix.  ``--workers`` runs each replica as a REAL subprocess behind
+the pipe RPC (``repro.serve.worker``) — crashes become SIGKILLs and the
+breaker is exercised across a process boundary:
+
+    PYTHONPATH=src python -m repro.launch.serve --arch llama3-8b --smoke \
+        --engine --replicas 2 --workers --journal wal.jsonl --recover
 """
 from __future__ import annotations
 
@@ -62,14 +73,25 @@ def _kv_banner(cfg, args, s_total: int):
           f"(requested {args.kv_splits}, cache {s_total} slots)")
 
 
+def _fleet_buckets(max_len: int) -> tuple:
+    """Fleet prefill buckets: the defaults plus a max_len bucket, so a
+    migration or crash-recovery replay (prompt + emitted tokens, up to
+    max_len) always fits some bucket instead of going FAILED."""
+    from repro.serve import default_buckets
+    base = default_buckets(max_len)
+    return base if base[-1] >= max_len else base + (max_len,)
+
+
 def _build_engine(args, cfg, params, mesh=None, *, sink=None,
-                  sampler_keys: str = "step"):
+                  sampler_keys: str = "step", replay_buckets: bool = False):
     from repro.serve import ServeEngine
     quant = not args.no_quantize
     budget = (int(args.mem_budget_mb * 2**20)
               if args.mem_budget_mb else None)
     return ServeEngine(
         params, cfg, max_slots=args.max_slots, max_len=args.max_len,
+        prompt_buckets=(_fleet_buckets(args.max_len)
+                        if replay_buckets else None),
         policy_name=args.policy, quantized=quant,
         kv_backend=args.kv_backend, kv_splits=args.kv_splits,
         temperature=args.temperature, top_k=args.top_k, seed=args.seed,
@@ -80,6 +102,27 @@ def _build_engine(args, cfg, params, mesh=None, *, sink=None,
                         if args.deadline_steps >= 0 else None),
         max_retries=args.max_retries, sampler_keys=sampler_keys,
         sink=sink)
+
+
+def _worker_kwargs(args) -> dict:
+    """The ``engine_factory`` spec for subprocess replicas — mirrors
+    ``_build_engine`` for the knobs a worker child builds itself (each
+    worker initializes its own params from ``--seed``; meshes stay
+    in-process)."""
+    budget = (int(args.mem_budget_mb * 2**20)
+              if args.mem_budget_mb else None)
+    return dict(
+        arch=args.arch, smoke=args.smoke, init_seed=args.seed,
+        max_slots=args.max_slots, max_len=args.max_len,
+        prompt_buckets=_fleet_buckets(args.max_len),
+        policy_name=args.policy, quantized=not args.no_quantize,
+        kv_backend=args.kv_backend, kv_splits=args.kv_splits,
+        temperature=args.temperature, top_k=args.top_k, seed=args.seed,
+        max_prefill_per_step=args.max_prefill_per_step,
+        mem_budget_bytes=budget, max_queue=args.max_queue or None,
+        deadline_steps=(args.deadline_steps
+                        if args.deadline_steps >= 0 else None),
+        max_retries=args.max_retries, sampler_keys="request")
 
 
 def _make_trace(args, cfg, engine):
@@ -112,17 +155,34 @@ def run_fleet(args, cfg, params, mesh=None) -> int:
         return 2
     _kv_banner(cfg, args, args.max_len)
     sink = _open_sink(args)
-    engines = []
+    journal = None
+    if args.journal:
+        from repro.serve import RequestJournal
+        journal = RequestJournal(args.journal, snapshot_every=64)
+        print(f"journal: write-ahead log at {args.journal} "
+              f"({journal.state.n_live} live requests on open)")
     t0 = time.time()
-    for i in range(args.replicas):
-        e = _build_engine(args, cfg, params, mesh, sink=sink,
-                          sampler_keys="request")
-        e.metrics.replica = i
-        e.warmup()
-        engines.append(e)
-    print(f"fleet: {args.replicas} replicas warmed in "
-          f"{time.time()-t0:.1f}s "
-          f"({engines[0].pool.max_slots} slots each)")
+    if args.workers:
+        from repro.serve import spawn_workers
+        engines = spawn_workers(args.replicas, kwargs=_worker_kwargs(args))
+        for i, w in enumerate(engines):
+            w.metrics.replica = i
+        print(f"fleet: {args.replicas} subprocess workers "
+              f"(pids {[w.pid for w in engines]}) warmed in "
+              f"{time.time()-t0:.1f}s "
+              f"({engines[0].pool.max_slots} slots each)")
+    else:
+        engines = []
+        for i in range(args.replicas):
+            e = _build_engine(args, cfg, params, mesh, sink=sink,
+                              sampler_keys="request",
+                              replay_buckets=True)
+            e.metrics.replica = i
+            e.warmup()
+            engines.append(e)
+        print(f"fleet: {args.replicas} replicas warmed in "
+              f"{time.time()-t0:.1f}s "
+              f"({engines[0].pool.max_slots} slots each)")
     breaker = BreakerConfig(
         window_steps=args.breaker_window,
         degrade_faults=args.breaker_degrade,
@@ -130,7 +190,18 @@ def run_fleet(args, cfg, params, mesh=None) -> int:
         cooldown_steps=args.breaker_cooldown,
         stall_steps=args.breaker_stall)
     router = Router(engines, policy=args.route, breaker=breaker,
-                    max_migrations=args.max_migrations, sink=sink)
+                    max_migrations=args.max_migrations, sink=sink,
+                    journal=journal,
+                    journal_tokens_every=args.journal_tokens_every)
+    if args.recover:
+        if journal is None:
+            print("--recover needs --journal")
+            return 2
+        info = router.recover()
+        print(f"recover: {info['n_recovered']} requests rebuilt from the "
+              f"journal ({info['n_done']} already complete on disk, "
+              f"{info['n_placed']} re-placed, {info['n_pending']} pending, "
+              f"{info['n_failed']} failed)")
     if args.chaos_seed >= 0:
         plan = chaos_plan(args.chaos_seed, steps=max(8, args.requests),
                           replicas=args.replicas,
@@ -155,6 +226,18 @@ def run_fleet(args, cfg, params, mesh=None) -> int:
     print(f"outcomes: done {fleet['n_done']} dropped {fleet['n_dropped']} "
           f"cancelled {fleet['n_cancelled']} failed {fleet['n_failed']} "
           f"rejected {fleet['n_rejected']}")
+    if fleet["n_recovered"]:
+        print(f"recovery: {fleet['n_recovered']} recovered, replay "
+              f"success {fleet['recovery_replay_success']:.2f}")
+    if journal is not None:
+        st = journal.state
+        print(f"journal: {journal.appends} appends, "
+              f"{journal.snapshots} snapshots, {st.n_submits} submits -> "
+              f"{st.n_terminals} terminals (+{st.n_live} live)")
+        journal.close()
+    if args.workers:
+        for w in engines:
+            w.shutdown()
     if sink is not None:
         sink.close()
     if summary["stalled"]:
@@ -309,7 +392,9 @@ def run(args):
         # single-device mesh adds nothing but sharding plumbing — keep the
         # engine on the exact unsharded path there
         eng_mesh = mesh if mesh.size > 1 else None
-        if args.replicas > 1:
+        if args.replicas > 1 or args.workers or args.journal:
+            # journal/worker modes always go through the router — a
+            # single replica is just a fleet of one
             return run_fleet(args, cfg, params, mesh=eng_mesh)
         return run_engine(args, cfg, params, mesh=eng_mesh)
     return run_lockstep(args, cfg, params)
@@ -394,6 +479,22 @@ def main():
                          "crash/sick/slow; -1 = off)")
     ap.add_argument("--chaos-events", type=int, default=3,
                     help="fleet: chaos events to schedule")
+    # -- durability (write-ahead journal + subprocess workers) -------------
+    ap.add_argument("--journal", default="",
+                    help="fleet: write-ahead request journal (JSONL; "
+                         "fsync'd).  Reopening an existing journal "
+                         "replays it")
+    ap.add_argument("--workers", action="store_true",
+                    help="fleet: run each replica as a real subprocess "
+                         "behind the pipe RPC (repro.serve.worker)")
+    ap.add_argument("--recover", action="store_true",
+                    help="fleet: rebuild in-flight requests from the "
+                         "--journal before serving the trace "
+                         "(whole-router crash recovery)")
+    ap.add_argument("--journal-tokens-every", type=int, default=1,
+                    help="fleet: journal token deltas every N router "
+                         "steps (group-commit cadence; lost tail tokens "
+                         "are regenerated deterministically on recovery)")
     return run(ap.parse_args())
 
 

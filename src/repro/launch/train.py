@@ -48,36 +48,63 @@ from repro.train.train_step import TrainConfig, make_train_step
 
 
 class Watchdog:
-    """Logs when the current step runs long (straggler/hang detection)."""
+    """Logs when the current step runs long (straggler/hang detection).
 
-    def __init__(self, factor: float = 5.0, min_history: int = 5):
+    Thread-safe by a lock + step generation counter: the old
+    implementation's monitor thread cleared ``self._started`` (its "one
+    alert per step" latch) while ``step_end`` was reading it on the main
+    thread — an alert racing a step boundary could drop that step's
+    duration sample or re-arm against the wrong step.  Now every field
+    is read/written under ``_lock``, the alert latch is "alerted at
+    generation N" (so an alerted step still records its duration at
+    ``step_end``), and with a ``sink`` each alert is also emitted as a
+    ``watchdog_alert`` event to the JSONL stream (``--events``) instead
+    of being print-only."""
+
+    def __init__(self, factor: float = 5.0, min_history: int = 5,
+                 *, sink: EventSink | None = None):
         self.factor, self.min_history = factor, min_history
         self.times: list[float] = []
         self._started: float | None = None
+        self._gen = 0                 # step generation (monotonic)
+        self._alerted_gen = -1        # last generation already alerted
+        self._lock = threading.Lock()
         self._stop = threading.Event()
         self.alerts = 0
+        self.sink = sink
         self._thread = threading.Thread(target=self._run, daemon=True)
         self._thread.start()
 
     def step_start(self):
-        self._started = time.time()
+        with self._lock:
+            self._gen += 1
+            self._started = time.time()
 
     def step_end(self):
-        if self._started is not None:
-            self.times.append(time.time() - self._started)
-            self.times = self.times[-100:]
-        self._started = None
+        with self._lock:
+            if self._started is not None:
+                self.times.append(time.time() - self._started)
+                self.times = self.times[-100:]
+            self._started = None
 
     def _run(self):
         while not self._stop.wait(0.5):
-            if self._started is None or len(self.times) < self.min_history:
-                continue
-            med = statistics.median(self.times)
-            if time.time() - self._started > self.factor * med:
+            with self._lock:
+                if (self._started is None
+                        or self._gen == self._alerted_gen
+                        or len(self.times) < self.min_history):
+                    continue
+                med = statistics.median(self.times)
+                running = time.time() - self._started
+                if running <= self.factor * med:
+                    continue
                 self.alerts += 1
-                print(f"[watchdog] step running {time.time()-self._started:.1f}s"
-                      f" > {self.factor:.0f}x median {med:.2f}s — straggler?")
-                self._started = None  # one alert per step
+                self._alerted_gen = self._gen    # one alert per step
+            print(f"[watchdog] step running {running:.1f}s"
+                  f" > {self.factor:.0f}x median {med:.2f}s — straggler?")
+            if self.sink is not None:
+                self.sink.emit("watchdog_alert", running_s=running,
+                               median_s=med, factor=self.factor)
 
     def close(self):
         self._stop.set()
@@ -238,7 +265,7 @@ def run(args):
               f"{args.guard_spike_factor}x rolling median; "
               f"{args.guard_rollback_after} consecutive bad steps -> "
               f"rollback (costs one loss sync per step)")
-    wd = Watchdog()
+    wd = Watchdog(sink=sink)
     data = synthetic_lm_batches(cfg, args.batch, args.seq, seed=args.seed,
                                 state=data_state)
     t0 = time.time()

@@ -1,13 +1,19 @@
 """Continuous-batching serve engine: slot-pooled int8 KV cache, FCFS
 scheduler, recompile-free join/evict step loop, the fault-tolerance
-layer (deadlines, cancellation, quarantine + replay), and the replica
-fleet (router, health-based failover, cross-replica migration).  See
-README.md in this package for the architecture, the static-shape
-contract, and the failure semantics."""
+layer (deadlines, cancellation, quarantine + replay), the replica
+fleet (router, health-based failover, cross-replica migration), and
+the durable serving plane (write-ahead request journal, subprocess
+replica workers, whole-fleet crash recovery).  See README.md in this
+package for the architecture, the static-shape contract, and the
+failure semantics."""
 from repro.serve.cache_pool import SlotPool, scatter_request
 from repro.serve.engine import ServeEngine, default_buckets, supports
 from repro.serve.faults import (FaultEvent, FaultInjector, FaultPlan,
-                                FleetFaultInjector, chaos_plan, poison_slot)
+                                FleetFaultInjector, SimulatedCrash,
+                                chaos_plan, crash_after_appends,
+                                poison_slot, tear_tail)
+from repro.serve.journal import (JournalState, RequestJournal, load_state,
+                                 WAL_KINDS)
 from repro.serve.metrics import ServeMetrics, fleet_summary
 from repro.serve.router import (ACCEPTING, DEAD, DEGRADED, DRAINED,
                                 DRAINING, HEALTHY, QUARANTINED,
@@ -19,6 +25,8 @@ from repro.serve.scheduler import (CANCELLED, DECODE, DONE, DROPPED, FAILED,
                                    MIGRATED, PREFILL, QUEUED, TERMINAL,
                                    AdmissionRejected, Request, Scheduler)
 from repro.serve.trace import TraceRequest, synthetic_trace
+from repro.serve.worker import (WorkerDied, WorkerProxy, engine_factory,
+                                spawn_worker, spawn_workers)
 
 __all__ = [
     "ServeEngine", "SlotPool", "Scheduler", "Request", "ServeMetrics",
@@ -27,6 +35,10 @@ __all__ = [
     "make_sampler", "default_buckets", "supports",
     "FaultPlan", "FaultEvent", "FaultInjector", "FleetFaultInjector",
     "chaos_plan", "poison_slot", "AdmissionRejected",
+    "SimulatedCrash", "crash_after_appends", "tear_tail",
+    "RequestJournal", "JournalState", "load_state", "WAL_KINDS",
+    "WorkerProxy", "WorkerDied", "spawn_worker", "spawn_workers",
+    "engine_factory",
     "Router", "BreakerConfig", "FleetRequest", "make_fleet",
     "fleet_summary",
     "HEALTHY", "DEGRADED", "QUARANTINED", "DRAINING", "DRAINED", "DEAD",

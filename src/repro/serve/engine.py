@@ -717,6 +717,15 @@ class ServeEngine:
                              self.pool.occupancy)
         self._step_no += 1
 
+    def request_states(self) -> dict:
+        """Light host-side view of every request: ``rid -> {state,
+        tokens, slot}``.  The subprocess worker's harvest payload (the
+        router's ``_harvest`` reads the same fields off in-process
+        engines directly), and the WAL's token-delta source."""
+        return {rid: {"state": r.state, "tokens": list(r.tokens),
+                      "slot": r.slot}
+                for rid, r in self._requests.items()}
+
     def summary(self, *, stalled: bool = False) -> dict:
         """Metrics summary + live scheduler/pool diagnostics.  Always
         complete — a stalled run flags ``stalled=True`` instead of

@@ -46,6 +46,23 @@ by :class:`FleetFaultInjector` against a ``Router`` (a per-engine
     progress for ``duration`` router steps; the breaker's stall detector
     (resident > 0, zero tokens emitted) quarantines it if the pause
     outlasts ``stall_steps``.
+``worker_sigkill``
+    ``engine.terminate()`` on a subprocess replica
+    (:class:`~repro.serve.worker.WorkerProxy`) — a REAL ``SIGKILL``
+    fired WITHOUT telling the router (unlike ``replica_crash``, which
+    is the router's own kill path).  The breaker has to notice on its
+    own: the proxy's heartbeat stops, its counters freeze, the stall
+    detector trips, and quarantine evacuates the victims.  Kept in
+    ``WORKER_KINDS`` (not ``REPLICA_KINDS``) so :func:`chaos_plan`'s
+    seeded draws over the default kind set are unchanged.
+
+Crash-at-every-point harness (ISSUE 9), for the DURABLE serving plane:
+:class:`SimulatedCrash` + :func:`crash_after_appends` arm the journal's
+``post_append`` hook to kill the router at the N-th write-ahead append —
+after the record hit disk, before the router acted on it (the
+append-vs-placement window); :func:`tear_tail` truncates a journal
+mid-final-record to model a crash mid-write.  Sweeping N over a seeded
+subset of append indices is the "kill -9 at an arbitrary point" proof.
 
 Recovery contract (what the tests assert): the quarantined slot passes a
 pool audit and returns to the free list; the victim replays from prompt
@@ -56,6 +73,7 @@ exactly the fault-free greedy stream; drained pools show zero slot leaks
 from __future__ import annotations
 
 import dataclasses
+import os
 from collections import Counter
 from typing import Iterable, Optional
 
@@ -65,6 +83,14 @@ import numpy as np
 KINDS = ("nan_logits", "corrupt_row", "drop_scatter", "cancel")
 #: fleet-level kinds, fired by FleetFaultInjector at ROUTER steps
 REPLICA_KINDS = ("replica_crash", "replica_sick", "replica_slow")
+#: subprocess-worker kinds — separate tuple: appending to REPLICA_KINDS
+#: would shift chaos_plan's seeded rng.randint(len(kinds)) draws
+WORKER_KINDS = ("worker_sigkill",)
+
+
+class SimulatedCrash(RuntimeError):
+    """Raised by the crash harness to model ``kill -9``: the process is
+    gone mid-operation, no cleanup runs, only the journal survives."""
 
 
 @dataclasses.dataclass(frozen=True)
@@ -81,14 +107,16 @@ class FaultEvent:
     duration: Optional[int] = None        # replica_slow: pause length
 
     def __post_init__(self):
-        if self.kind not in KINDS + REPLICA_KINDS:
+        known = KINDS + REPLICA_KINDS + WORKER_KINDS
+        if self.kind not in known:
             raise ValueError(f"FaultEvent: unknown kind {self.kind!r} "
-                             f"(expected one of {KINDS + REPLICA_KINDS})")
+                             f"(expected one of {known})")
         if self.step < 0:
             raise ValueError("FaultEvent: step must be >= 0")
         if self.kind == "cancel" and self.rid is None:
             raise ValueError("FaultEvent: cancel needs a rid")
-        if self.kind in REPLICA_KINDS and self.replica is None:
+        if self.kind in REPLICA_KINDS + WORKER_KINDS \
+                and self.replica is None:
             raise ValueError(f"FaultEvent: {self.kind} needs a replica")
 
 
@@ -141,6 +169,9 @@ class FaultPlan:
                      duration: int = 8) -> "FaultPlan":
         return self.add(step, "replica_slow", replica=replica,
                         duration=duration)
+
+    def worker_sigkill(self, step: int, replica: int) -> "FaultPlan":
+        return self.add(step, "worker_sigkill", replica=replica)
 
     def at(self, step: int, kind: Optional[str] = None) -> list[FaultEvent]:
         return [e for e in self.events
@@ -245,6 +276,7 @@ class FleetFaultInjector:
         self.crashed: set[int] = set()
         self.sickened: set[int] = set()
         self.paused: set[int] = set()
+        self.sigkilled: set[int] = set()
         router.hooks["pre_step"] = self._pre_step
 
     def uninstall(self) -> None:
@@ -256,6 +288,14 @@ class FleetFaultInjector:
             if router.kill(e.replica):
                 self.injected["replica_crash"] += 1
                 self.crashed.add(e.replica)
+        for e in self.plan.at(step, "worker_sigkill"):
+            # a REAL SIGKILL behind the router's back: only subprocess
+            # replicas (WorkerProxy.terminate) can take one — the router
+            # finds out through its own stall detector, not from us
+            term = getattr(router.engines[e.replica], "terminate", None)
+            if callable(term) and term():
+                self.injected["worker_sigkill"] += 1
+                self.sigkilled.add(e.replica)
         for e in self.plan.at(step, "replica_sick"):
             engine = router.engines[e.replica]
             if router.health[e.replica] == "DEAD":
@@ -263,19 +303,85 @@ class FleetFaultInjector:
             # poison one resident slot (rid-targeted if asked, else the
             # lowest live slot) — the replica's OWN sentinel detects it
             slot = None
-            if e.rid is not None:
-                req = engine._requests.get(e.rid)
-                slot = req.slot if req is not None else None
-            elif engine._slot_req:
-                slot = min(engine._slot_req)
+            if hasattr(engine, "_slot_req"):          # in-process engine
+                if e.rid is not None:
+                    req = engine._requests.get(e.rid)
+                    slot = req.slot if req is not None else None
+                elif engine._slot_req:
+                    slot = min(engine._slot_req)
+                if slot is not None:
+                    poison_slot(engine, slot, float("nan"))
+            else:
+                # subprocess replica: resolve the victim from the
+                # proxy's request mirror and poison over the RPC — the
+                # sentinel trips INSIDE the worker process
+                views = getattr(engine, "_requests", {})
+                if e.rid is not None:
+                    v = views.get(e.rid)
+                    slot = v.slot if v is not None else None
+                else:
+                    slots = [v.slot for v in views.values()
+                             if v.slot is not None
+                             and v.state not in ("DONE", "CANCELLED",
+                                                 "DROPPED", "FAILED",
+                                                 "MIGRATED")]
+                    slot = min(slots) if slots else None
+                if slot is not None and not engine.poison_slot(
+                        slot, float("nan")):
+                    slot = None
             if slot is not None:
-                poison_slot(engine, slot, float("nan"))
                 self.injected["replica_sick"] += 1
                 self.sickened.add(e.replica)
         for e in self.plan.at(step, "replica_slow"):
             if router.pause(e.replica, e.duration or 8):
                 self.injected["replica_slow"] += 1
                 self.paused.add(e.replica)
+
+
+def crash_after_appends(journal, n: int) -> dict:
+    """Arm a :class:`SimulatedCrash` at the ``n``-th write-ahead append
+    (1-indexed, counted from arming).
+
+    The journal fires ``post_append`` AFTER the record is durable and
+    reduced into its state, BEFORE the caller acts on it — so crashing
+    there at a ``wal_submit`` is precisely the "kill -9 between journal
+    append and placement" window.  The hook uninstalls itself when it
+    fires (the process is "dead"; nothing else runs).  Returns a live
+    counter dict: ``{"appends": seen, "fired": bool}``."""
+    if n < 1:
+        raise ValueError("crash_after_appends: n must be >= 1")
+    state = {"appends": 0, "fired": False}
+
+    def _hook(j, kind, rec):
+        state["appends"] += 1
+        if state["appends"] >= n:
+            state["fired"] = True
+            j.hooks.pop("post_append", None)
+            raise SimulatedCrash(
+                f"kill -9 after append {state['appends']} ({kind})")
+
+    journal.hooks["post_append"] = _hook
+    return state
+
+
+def tear_tail(path: str, nbytes: Optional[int] = None) -> int:
+    """Truncate a journal mid-final-record — the torn tail a crash
+    leaves when it lands inside a write.  Cuts ``nbytes`` off the end
+    (default: half the final record, at least 1 byte, keeping the
+    record's leading bytes so the tail is INVALID JSON rather than
+    merely absent).  Returns the new file size."""
+    size = os.path.getsize(path)
+    with open(path, "rb") as f:
+        data = f.read()
+    body = data[:-1] if data.endswith(b"\n") else data
+    last_nl = body.rfind(b"\n")
+    last_len = len(data) - (last_nl + 1)
+    if nbytes is None:
+        nbytes = max(1, last_len // 2)
+    nbytes = min(nbytes, size)
+    with open(path, "r+b") as f:
+        f.truncate(size - nbytes)
+    return size - nbytes
 
 
 def chaos_plan(seed: int, *, steps: int, replicas: int,

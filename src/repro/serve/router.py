@@ -60,6 +60,25 @@ Elasticity
 metrics (goodput vs throughput, failovers, migrations, time in
 quarantine) and ``reconcile()`` cross-checks the fleet request table
 against every replica's ledger — each request terminal exactly once.
+
+Durability (ISSUE 9) — the write-ahead journal and whole-router crashes
+    With ``journal=`` (a :class:`~repro.serve.journal.RequestJournal`)
+    every fleet transition is logged BEFORE the router acts on it:
+    SUBMIT before placement, the healthy token deltas at every harvest,
+    exactly one TERMINAL per request.  After a whole-router ``kill -9``,
+    ``Router.recover()`` on a FRESH fleet rebuilds the request table
+    from the journal's reduced state and re-submits every live request
+    from its prompt + durably-logged tokens — the engine regenerates
+    the (possibly lost) fsync-lag suffix deterministically, so greedy
+    recovery is token-exact and sampled recovery key-exact under
+    ``sampler_keys="request"``.  ``reconcile()`` then additionally
+    proves every journaled SUBMIT reached exactly one TERMINAL.
+
+    Subprocess replicas (:class:`~repro.serve.worker.WorkerProxy`) slot
+    into the same fleet: ``kill()`` becomes a real SIGKILL, and the
+    stall detector treats a dead worker holding work as stalled (its
+    RPC heartbeat stopped), so the breaker quarantines and evacuates it
+    across the process boundary.
 """
 from __future__ import annotations
 
@@ -127,7 +146,10 @@ class Router:
 
     def __init__(self, engines: Sequence, *, policy: str = "least_loaded",
                  breaker: Optional[BreakerConfig] = None,
-                 max_migrations: int = 2, sink=None):
+                 max_migrations: int = 2, sink=None, journal=None,
+                 journal_tokens_every: int = 1):
+        if journal_tokens_every < 1:
+            raise ValueError("Router: journal_tokens_every must be >= 1")
         if not engines:
             raise ValueError("Router: need at least one engine replica")
         if policy not in ROUTE_POLICIES:
@@ -168,6 +190,18 @@ class Router:
         self.failovers = 0                     # crash/quarantine/FAILED moves
         self.migrations = 0                    # successful re-placements
         self.time_in_quarantine: list[int] = [0] * n
+        #: write-ahead request journal (attach at construction so every
+        #: SUBMIT is journaled — a mid-run attach would leave earlier
+        #: terminals unaccounted)
+        self.journal = journal
+        #: token-journaling cadence: wal_tokens deltas flush every N
+        #: router steps (and always at a terminal).  Token records only
+        #: bound how much a recovery must REGENERATE — replay is
+        #: deterministic either way — so a cadence > 1 trades a wider
+        #: fsync-lag window for one append per request per N steps
+        self.journal_tokens_every = journal_tokens_every
+        self._recovered_done = 0        # DONE straight from the journal
+        self._journal_recovered: list[int] = []   # gids recover() rebuilt
 
     # -- events ------------------------------------------------------------
     def _event(self, kind: str, **fields) -> None:
@@ -180,6 +214,16 @@ class Router:
         self._event("health", replica=i, frm=self.health[i], to=state,
                     reason=reason)
         self.health[i] = state
+
+    def _fleet_terminal(self, fr: FleetRequest, state: str,
+                        **fields) -> None:
+        """The ONE place a fleet request goes terminal: set the state,
+        emit the event, and close the journal entry (exactly one
+        wal_terminal per journaled submit — ``reconcile`` proves it)."""
+        fr.state = state
+        self._event("fleet_terminal", gid=fr.gid, state=state, **fields)
+        if self.journal is not None:
+            self.journal.terminal(fr.gid, state, n_tokens=len(fr.tokens))
 
     # -- placement ---------------------------------------------------------
     @property
@@ -222,6 +266,9 @@ class Router:
             self._local2gid[i][rid] = fr.gid
             self._event("place", gid=fr.gid, replica=i, rid=rid,
                         front=front, emitted=len(fr.tokens))
+            if self.journal is not None:
+                self.journal.place(fr.gid, i, rid, front=front,
+                                   emitted=len(fr.tokens))
             return True
         return False
 
@@ -235,9 +282,19 @@ class Router:
                           prompt=np.asarray(prompt, np.int32),
                           max_new_tokens=max_new_tokens, eos_id=eos_id,
                           deadline_steps=deadline_steps)
+        if self.journal is not None:
+            # WRITE-AHEAD: the submit hits disk BEFORE placement, so a
+            # crash between the two still recovers the request — which
+            # also means the gid is consumed (and a rejection must close
+            # the journal entry with its own terminal)
+            self.journal.submit(fr.gid, fr.prompt, fr.max_new_tokens,
+                                fr.eos_id, fr.deadline_steps)
         if not self._place(fr, front=False):
             self.rejected += 1
             self._event("fleet_reject", gid=fr.gid)
+            if self.journal is not None:
+                self._next_gid += 1
+                self.journal.terminal(fr.gid, "REJECTED")
             raise AdmissionRejected(
                 f"Router: every accepting replica rejected request "
                 f"{fr.gid} (fleet backpressure)")
@@ -255,8 +312,7 @@ class Router:
         elif fr.replica is not None:
             self.engines[fr.replica].evict_request(fr.local_rid, CANCELLED)
             self._local2gid[fr.replica].pop(fr.local_rid, None)
-        fr.state = CANCELLED
-        self._event("fleet_terminal", gid=gid, state=CANCELLED)
+        self._fleet_terminal(fr, CANCELLED)
         return True
 
     # -- failover ----------------------------------------------------------
@@ -266,21 +322,22 @@ class Router:
         instead of ping-ponging forever."""
         fr.replica, fr.local_rid = None, None
         if fr.migrations >= self.max_migrations:
-            fr.state = FAILED
-            self._event("fleet_terminal", gid=fr.gid, state=FAILED,
-                        reason=f"migration budget exhausted ({reason})")
+            self._fleet_terminal(
+                fr, FAILED,
+                reason=f"migration budget exhausted ({reason})")
             return
         self.failovers += 1
         self._event("failover", gid=fr.gid, reason=reason,
                     emitted=len(fr.tokens))
+        if self.journal is not None:
+            self.journal.migrate(fr.gid, reason)
         try:
             placed = self._place(fr, front=True)
         except ValueError:
             # replay prompt outgrew every replica's buckets — the same
             # escalation the engine-internal replay path takes
-            fr.state = FAILED
-            self._event("fleet_terminal", gid=fr.gid, state=FAILED,
-                        reason="replay prompt exceeds buckets")
+            self._fleet_terminal(fr, FAILED,
+                                 reason="replay prompt exceeds buckets")
             return
         if placed:
             fr.migrations += 1
@@ -301,11 +358,18 @@ class Router:
         return moved
 
     def kill(self, i: int) -> bool:
-        """Simulated replica crash: evacuate everything (from the
-        router's mirrored token log), close the dead ledger, and stop
-        scheduling the replica.  Returns False if already dead."""
+        """Replica crash: evacuate everything (from the router's
+        mirrored token log), close the dead ledger, and stop scheduling
+        the replica.  On a subprocess replica
+        (:class:`~repro.serve.worker.WorkerProxy`) this is a REAL
+        ``SIGKILL`` — the proxy's mirror then stands in for the dead
+        process's memory, exactly like a real deployment's request log.
+        Returns False if already dead."""
         if self.health[i] == DEAD:
             return False
+        term = getattr(self.engines[i], "terminate", None)
+        if callable(term):
+            term()                       # SIGKILL the worker subprocess
         self._set_health(i, DEAD, "crash")
         self._evacuate(i, f"replica {i} crashed")
         return True
@@ -348,6 +412,76 @@ class Router:
         self._tokens_seen[i] = self.engines[i].metrics.tokens_emitted
         self._set_health(i, HEALTHY, "rejoin")
 
+    # -- whole-router crash recovery ----------------------------------------
+    def recover(self, journal=None) -> dict:
+        """Rebuild fleet state from the write-ahead journal after a
+        whole-router crash (this router object is a FRESH fleet; the
+        crashed one is gone — ``kill -9`` leaves nothing else).
+
+        Every request the journal shows live — submitted, not yet
+        terminal, at ANY crash point including between the wal_submit
+        append and its placement — is re-entered with its durably-logged
+        token prefix (``emitted=``), riding the engine's deterministic
+        replay path: tokens past the last durable record (the fsync-lag
+        window) are REGENERATED, token-exact under greedy and key-exact
+        under ``sampler_keys="request"`` (the gid is the key identity).
+        A recovered request whose durable tokens already meet its budget
+        goes straight to ``DONE`` — its output is complete on disk; no
+        engine needs to run.
+
+        Idempotent: gids already in the fleet table are skipped, so
+        running ``recover`` twice (or recovering into a router that
+        already re-submitted some requests) changes nothing."""
+        if journal is not None:
+            self.journal = journal
+        if self.journal is None:
+            raise ValueError("Router.recover: no journal attached")
+        st = self.journal.state
+        self._next_gid = max(self._next_gid, st.next_gid)
+        info = {"n_live": st.n_live, "n_recovered": 0, "n_done": 0,
+                "n_placed": 0, "n_pending": 0, "n_failed": 0,
+                "n_skipped": 0}
+        for gid in sorted(st.live):
+            if gid in self._reqs:
+                info["n_skipped"] += 1     # idempotence: already rebuilt
+                continue
+            rec = st.live[gid]
+            fr = FleetRequest(
+                gid=gid, prompt=np.asarray(rec["prompt"], np.int32),
+                max_new_tokens=rec["max_new_tokens"],
+                eos_id=rec["eos_id"],
+                deadline_steps=rec["deadline_steps"],
+                tokens=list(rec["tokens"]),
+                migrations=rec.get("migrations", 0))
+            self._reqs[gid] = fr
+            self._journal_recovered.append(gid)
+            info["n_recovered"] += 1
+            self._event("recover", gid=gid, emitted=len(fr.tokens))
+            if len(fr.tokens) >= fr.max_new_tokens:
+                # complete on disk — the engine would (rightly) reject
+                # an emitted prefix that leaves nothing to generate
+                self._fleet_terminal(fr, DONE, tokens=len(fr.tokens),
+                                     recovered=True)
+                self._recovered_done += 1
+                info["n_done"] += 1
+                continue
+            try:
+                # front=False in ascending-gid order into empty queues:
+                # recovery REBUILDS the FCFS order (front=True would
+                # reverse it)
+                placed = self._place(fr, front=False)
+            except ValueError:
+                self._fleet_terminal(fr, FAILED,
+                                     reason="replay prompt exceeds buckets")
+                info["n_failed"] += 1
+                continue
+            if placed:
+                info["n_placed"] += 1
+            else:
+                self._pending.append(fr)
+                info["n_pending"] += 1
+        return info
+
     # -- the breaker -------------------------------------------------------
     def _update_health(self, i: int) -> None:
         b, marks = self.breaker, self._fault_marks[i]
@@ -359,10 +493,17 @@ class Router:
             marks.append(self._step_no)
         while marks and marks[0] <= self._step_no - b.window_steps:
             marks.popleft()
-        # stall detector: residents but no progress
+        # stall detector: residents but no progress.  A dead subprocess
+        # worker (SIGKILL — its RPC heartbeat stopped and the proxy
+        # marked itself dead) holding ANY work counts as stalled too:
+        # its token counter froze at death, so queued-only work would
+        # otherwise never trip the resident-based detector.
+        alive = getattr(e, "alive", True)
         progressed = e.metrics.tokens_emitted > self._tokens_seen[i]
         self._tokens_seen[i] = e.metrics.tokens_emitted
-        if e.scheduler.resident > 0 and not progressed:
+        holding = e.scheduler.resident > 0 or e.scheduler.queue_depth > 0
+        if (e.scheduler.resident > 0 and not progressed) \
+                or (not alive and holding):
             self._stalled[i] += 1
         else:
             self._stalled[i] = 0
@@ -370,6 +511,11 @@ class Router:
         h = self.health[i]
         if h == QUARANTINED:
             self.time_in_quarantine[i] += 1
+            if not alive:
+                # a dead process never earns probation — the quarantine
+                # was the breaker noticing the SIGKILL; finalize it
+                self._set_health(i, DEAD, "process dead in quarantine")
+                return
             if (self._step_no - self._quarantined_at[i]
                     >= b.cooldown_steps):
                 marks.clear()
@@ -403,21 +549,30 @@ class Router:
         for rid, gid in list(self._local2gid[i].items()):
             req = eng._requests[rid]
             fr = self._reqs[gid]
+            if self.journal is not None:
+                # journal the healthy token DELTA before mirroring it:
+                # the start index makes post-recovery re-emission an
+                # idempotent splice, not a double-append.  The durable
+                # length is the REDUCER's view (not fr.tokens — the
+                # cadence below lets the mirror run ahead of the WAL)
+                rec = self.journal.state.live.get(gid)
+                jlen = len(rec["tokens"]) if rec is not None else None
+                due = (req.state in TERMINAL
+                       or self._step_no % self.journal_tokens_every == 0)
+                if jlen is not None and due and len(req.tokens) > jlen:
+                    self.journal.tokens(gid, jlen, req.tokens[jlen:])
             fr.tokens = list(req.tokens)   # the replicated request log
             if req.state not in TERMINAL:
                 continue
             self._local2gid[i].pop(rid, None)
             fr.replica, fr.local_rid = None, None
             if req.state == DONE:
-                fr.state = DONE
-                self._event("fleet_terminal", gid=gid, state=DONE,
-                            tokens=len(fr.tokens))
+                self._fleet_terminal(fr, DONE, tokens=len(fr.tokens))
             elif req.state in (CANCELLED, DROPPED):
                 # deadline shedding and engine-side cancels are FINAL —
                 # a request that timed out queueing does not get a
                 # second queue on another replica
-                fr.state = req.state
-                self._event("fleet_terminal", gid=gid, state=fr.state)
+                self._fleet_terminal(fr, req.state)
             elif req.state == FAILED:
                 # local retry budget exhausted: one fleet-level failover
                 self._migrate(fr, f"replica {i} FAILED rid {rid}")
@@ -447,9 +602,8 @@ class Router:
             try:
                 placed = self._place(fr, front=True)
             except ValueError:
-                fr.state = FAILED
-                self._event("fleet_terminal", gid=fr.gid, state=FAILED,
-                            reason="replay prompt exceeds buckets")
+                self._fleet_terminal(fr, FAILED,
+                                     reason="replay prompt exceeds buckets")
                 continue
             if placed:
                 fr.migrations += 1
@@ -472,6 +626,14 @@ class Router:
         budget = max_steps if max_steps is not None else (
             sum((r.max_new_tokens + 4) * (self.max_migrations + 2)
                 for r in pending)
+            # recovered/in-flight requests already in the fleet table
+            # (e.g. rebuilt by recover() before an empty post-crash
+            # trace) need step budget too, or the drain is misflagged
+            # as a stall
+            + sum((fr.max_new_tokens - len(fr.tokens) + 4)
+                  * (self.max_migrations + 2)
+                  for fr in self._reqs.values()
+                  if fr.state not in TERMINAL)
             + (pending[-1].arrival_step if pending else 0) + 32)
         while i < len(pending) or self.live_requests() > 0:
             while (i < len(pending)
@@ -515,7 +677,10 @@ class Router:
             s["n_done"] + s["n_cancelled"] + s["n_dropped"]
             + s["n_failed"] + s["n_migrated_out"] for s in per)
         checks = {
-            "done_matches": fleet_done == local_done,
+            # recovered-complete requests go DONE straight from the
+            # journal, with no local placement to match
+            "done_matches":
+                fleet_done == local_done + self._recovered_done,
             "placements_match": placements == local_requests,
             "terminals_match": local_terminal == placements - live,
             "migrations_bounded": self.migrations <= local_migrated,
@@ -523,10 +688,27 @@ class Router:
                 fleet_failed <= sum(s["n_failed"] for s in per)
                 + self.failovers,
         }
-        return {"ok": all(checks.values()), "checks": checks,
-                "fleet_done": fleet_done, "local_done": local_done,
-                "placements": placements, "local_requests": local_requests,
-                "local_terminal": local_terminal, "live": live}
+        out = {"fleet_done": fleet_done, "local_done": local_done,
+               "placements": placements, "local_requests": local_requests,
+               "local_terminal": local_terminal, "live": live}
+        if self.journal is not None:
+            # the durability half: every journaled SUBMIT is either
+            # still live or reached EXACTLY ONE terminal record
+            st = self.journal.state
+            checks["journal_accounted"] = (
+                st.duplicate_terminals == 0
+                and st.n_submits == st.n_terminals + st.n_live)
+            out["journal"] = {
+                "n_submits": st.n_submits,
+                "n_terminals": st.n_terminals,
+                "n_live": st.n_live,
+                "duplicate_terminals": st.duplicate_terminals,
+                "terminal_counts": dict(st.terminal_counts),
+                "appends": self.journal.appends,
+                "snapshots": self.journal.snapshots,
+            }
+        out.update(ok=all(checks.values()), checks=checks)
+        return out
 
     def summary(self, *, stalled: bool = False) -> dict:
         """Fleet metrics: per-replica summaries rolled up via
@@ -558,6 +740,15 @@ class Router:
             "goodput_tokens": sum(len(fr.tokens)
                                   for fr in self._reqs.values()
                                   if fr.state == DONE),
+            "n_recovered": len(self._journal_recovered),
+            # of the requests recover() rebuilt from the journal, how
+            # many reached DONE — the crash-recovery success rate the
+            # CI ratchet floors
+            "recovery_replay_success": (
+                sum(1 for g in self._journal_recovered
+                    if self._reqs[g].state == DONE)
+                / len(self._journal_recovered)
+                if self._journal_recovered else 1.0),
         }
         out["health"] = list(self.health)
         out["time_in_quarantine"] = list(self.time_in_quarantine)

@@ -1,0 +1,290 @@
+"""Write-ahead request journal (ISSUE 9): fsync durability knob,
+incremental/tail reads, the JournalState reducer, snapshot+compaction,
+torn-tail tolerance, and the crash-at-every-point arming helpers.
+
+Everything here is journal/events-level — no engines, no jit — so the
+whole module runs in milliseconds and can afford to sweep crash points
+exhaustively.
+"""
+from __future__ import annotations
+
+import json
+import os
+import warnings
+
+import pytest
+
+from repro.events import EventSink, read_events
+from repro.serve.faults import SimulatedCrash, crash_after_appends, tear_tail
+from repro.serve.journal import (JournalState, RequestJournal, WAL_KINDS,
+                                 load_state)
+
+
+# ---------------------------------------------------------------------------
+class TestEventSinkDurability:
+    def test_fsync_knob(self, tmp_path):
+        p = str(tmp_path / "ev.jsonl")
+        with EventSink(p, fsync=True) as sink:
+            sink.emit("a", x=1)
+            sink.emit("b", x=2)
+            assert sink.fsyncs == 2       # one os.fsync per append
+        with EventSink(p) as sink:
+            sink.emit("c", x=3)
+            assert sink.fsyncs == 0       # default: buffer flush only
+
+    def test_fsync_respects_flush_batching(self, tmp_path):
+        p = str(tmp_path / "ev.jsonl")
+        with EventSink(p, fsync=True, flush_every=3) as sink:
+            sink.emit("a")
+            sink.emit("b")
+            assert sink.fsyncs == 0
+            sink.emit("c")
+            assert sink.fsyncs == 1       # fsync rides the batched flush
+
+    def test_tell_is_end_of_written_records(self, tmp_path):
+        p = str(tmp_path / "ev.jsonl")
+        with EventSink(p, flush_every=10) as sink:
+            sink.emit("a", x=1)
+            off = sink.tell()             # flushes first
+            assert off == os.path.getsize(p) > 0
+            sink.emit("b", x=2)
+            assert sink.tell() > off
+
+
+class TestIncrementalReads:
+    def test_offset_resumes_where_previous_read_ended(self, tmp_path):
+        p = str(tmp_path / "ev.jsonl")
+        with EventSink(p) as sink:
+            sink.emit("a", i=0)
+            first, off = read_events(p, with_offset=True)
+            assert [r["kind"] for r in first] == ["a"]
+            sink.emit("b", i=1)
+            sink.emit("c", i=2)
+            tail, end = read_events(p, offset=off, with_offset=True)
+        assert [r["kind"] for r in tail] == ["b", "c"]
+        assert end == os.path.getsize(p)
+        # fully-consumed tail: next incremental read is empty
+        again, end2 = read_events(p, offset=end, with_offset=True)
+        assert again == [] and end2 == end
+
+    def test_torn_tail_under_fsync_batching(self, tmp_path):
+        """The regression the satellite names: with fsync batching a
+        partial final line is the steady state, not a crash — tail mode
+        must stop BEFORE it (silently, retryable), while the default
+        mode warns and skips."""
+        p = str(tmp_path / "ev.jsonl")
+        with EventSink(p, fsync=True) as sink:
+            sink.emit("a", i=0)
+            sink.emit("b", i=1)
+        size = os.path.getsize(p)
+        with open(p, "a") as f:           # in-flight write: no newline yet
+            f.write('{"seq": 2, "kind": "c", "half')
+        with warnings.catch_warnings():
+            warnings.simplefilter("error")     # tail mode must NOT warn
+            recs, end = read_events(p, with_offset=True)
+        assert [r["kind"] for r in recs] == ["a", "b"]
+        assert end == size                # offset stops before the tear
+        with pytest.warns(UserWarning, match="truncated"):
+            assert len(read_events(p)) == 2    # default mode warns + skips
+        # the write completes -> the SAME offset now yields the record
+        with open(p, "a") as f:
+            f.write('": 1}\n')
+        more, _ = read_events(p, offset=end, with_offset=True)
+        assert [r["kind"] for r in more] == ["c"]
+
+    def test_kind_filter_composes_with_offset(self, tmp_path):
+        p = str(tmp_path / "ev.jsonl")
+        with EventSink(p) as sink:
+            for i in range(6):
+                sink.emit("a" if i % 2 else "b", i=i)
+        _, mid = read_events(p, with_offset=True)
+        with EventSink(p) as sink:
+            sink.emit("a", i=6)
+            sink.emit("b", i=7)
+        assert [r["i"] for r in read_events(p, kind="a", offset=mid)] == [6]
+
+
+# ---------------------------------------------------------------------------
+def _submit(j, gid, prompt=(1, 2, 3), max_new=4, eos=None, deadline=None):
+    j.submit(gid, list(prompt), max_new, eos, deadline)
+
+
+class TestJournalState:
+    def test_reducer_lifecycle(self):
+        st = JournalState()
+        st.apply("wal_submit", dict(gid=0, prompt=[1, 2], max_new_tokens=3,
+                                    eos_id=None, deadline_steps=None))
+        assert st.n_live == 1 and st.next_gid == 1
+        st.apply("wal_place", dict(gid=0, replica=1, rid=0, front=False,
+                                   emitted=0))
+        st.apply("wal_tokens", dict(gid=0, start=0, toks=[5, 6]))
+        st.apply("wal_migrate", dict(gid=0, reason="x"))
+        rec = st.live[0]
+        assert rec["tokens"] == [5, 6]
+        assert rec["placements"] == 1 and rec["migrations"] == 1
+        st.apply("wal_terminal", dict(gid=0, state="DONE", n_tokens=2))
+        assert st.n_live == 0 and st.n_terminals == 1
+        assert st.goodput_tokens == 2
+        assert st.terminal_counts == {"DONE": 1}
+
+    def test_token_splice_is_idempotent(self):
+        """The start index makes a post-recovery re-emission overwrite
+        the regenerated overlap instead of double-appending."""
+        st = JournalState()
+        st.apply("wal_submit", dict(gid=0, prompt=[1], max_new_tokens=8,
+                                    eos_id=None, deadline_steps=None))
+        st.apply("wal_tokens", dict(gid=0, start=0, toks=[10, 11, 12]))
+        # recovery replayed from the 2-token durable prefix, then the
+        # recovered run re-emitted from start=2
+        st.apply("wal_tokens", dict(gid=0, start=2, toks=[12, 13]))
+        assert st.live[0]["tokens"] == [10, 11, 12, 13]
+
+    def test_duplicate_terminal_is_counted_not_applied(self):
+        st = JournalState()
+        st.apply("wal_submit", dict(gid=0, prompt=[1], max_new_tokens=2,
+                                    eos_id=None, deadline_steps=None))
+        st.apply("wal_terminal", dict(gid=0, state="DONE", n_tokens=2))
+        st.apply("wal_terminal", dict(gid=0, state="DONE", n_tokens=2))
+        assert st.duplicate_terminals == 1
+        assert st.n_terminals == 1        # the second never lands
+
+    def test_json_roundtrip(self):
+        st = JournalState()
+        st.apply("wal_submit", dict(gid=3, prompt=[7], max_new_tokens=2,
+                                    eos_id=1, deadline_steps=9))
+        back = JournalState.from_json(
+            json.loads(json.dumps(st.to_json())))
+        assert back.to_json() == st.to_json()
+        assert 3 in back.live             # gid keys back to int
+
+
+class TestRequestJournal:
+    def test_append_reduces_incrementally_and_reopen_replays(self, tmp_path):
+        p = str(tmp_path / "wal.jsonl")
+        j = RequestJournal(p)
+        _submit(j, 0)
+        j.place(0, 0, 0, front=False, emitted=0)
+        j.tokens(0, 0, [9, 8])
+        _submit(j, 1)
+        j.terminal(0, "DONE", n_tokens=2)
+        live_json = j.state.to_json()
+        j.close()
+        j2 = RequestJournal(p)            # reopen = replay
+        assert j2.state.to_json() == live_json
+        j2.close()
+        # the incremental state matches a cold full-history reduction
+        st, off = load_state(p)
+        assert st.to_json() == live_json
+        assert off == os.path.getsize(p)
+
+    def test_snapshot_plus_tail_equals_full_history(self, tmp_path):
+        p = str(tmp_path / "wal.jsonl")
+        j = RequestJournal(p)
+        for g in range(4):
+            _submit(j, g)
+            j.tokens(g, 0, [g])
+        j.terminal(0, "DONE", n_tokens=1)
+        j.snapshot()
+        snap_off = json.load(open(p + ".snap"))["offset"]
+        j.tokens(1, 1, [42])              # tail records after the snapshot
+        j.terminal(2, "CANCELLED")
+        j.close()
+        with_snap, off1 = load_state(p)
+        os.remove(p + ".snap")
+        full, off2 = load_state(p)        # O(history) fallback
+        assert with_snap.to_json() == full.to_json()
+        assert off1 == off2 == os.path.getsize(p) > snap_off
+
+    def test_auto_snapshot_cadence(self, tmp_path):
+        p = str(tmp_path / "wal.jsonl")
+        j = RequestJournal(p, snapshot_every=3)
+        for g in range(4):
+            _submit(j, g)
+        assert j.snapshots == 1 and os.path.exists(p + ".snap")
+        j.close()
+
+    def test_half_written_snapshot_falls_back_to_full_scan(self, tmp_path):
+        p = str(tmp_path / "wal.jsonl")
+        j = RequestJournal(p)
+        _submit(j, 0)
+        j.snapshot()
+        _submit(j, 1)
+        j.close()
+        want = load_state(p)[0].to_json()
+        with open(p + ".snap", "w") as f:
+            f.write('{"offset": 12, "sta')   # torn snapshot
+        assert load_state(p)[0].to_json() == want
+
+    def test_fsync_default_on(self, tmp_path):
+        p = str(tmp_path / "wal.jsonl")
+        j = RequestJournal(p)
+        _submit(j, 0)
+        assert j._sink.fsyncs == 1        # WAL default: durable appends
+        j.close()
+
+
+# ---------------------------------------------------------------------------
+class TestCrashHarness:
+    def test_crash_after_appends_fires_after_durable_write(self, tmp_path):
+        p = str(tmp_path / "wal.jsonl")
+        j = RequestJournal(p)
+        state = crash_after_appends(j, 2)
+        _submit(j, 0)
+        with pytest.raises(SimulatedCrash):
+            j.place(0, 0, 0, front=False, emitted=0)
+        assert state == {"appends": 2, "fired": True}
+        assert "post_append" not in j.hooks    # self-uninstalls
+        # the record that "killed" us is ON DISK and recoverable
+        st, _ = load_state(p)
+        assert st.live[0]["placements"] == 1
+        j.close()
+
+    def test_crash_at_every_point_never_loses_a_submit(self, tmp_path):
+        """Exhaustive sweep: crash after EVERY append index of a small
+        scripted run — recovery always sees submits >= terminals + live
+        with no duplicates (the reconcile invariant), because appends
+        hit disk before anything acts on them."""
+        def script(j):
+            _submit(j, 0)
+            j.place(0, 0, 0, front=False, emitted=0)
+            j.tokens(0, 0, [1, 2])
+            _submit(j, 1)
+            j.terminal(0, "DONE", n_tokens=2)
+            j.terminal(1, "CANCELLED")
+        total = 6
+        for n in range(1, total + 1):
+            p = str(tmp_path / f"wal{n}.jsonl")
+            j = RequestJournal(p)
+            crash_after_appends(j, n)
+            with pytest.raises(SimulatedCrash):
+                script(j)
+            st, _ = load_state(p)
+            assert st.duplicate_terminals == 0
+            assert st.n_submits == st.n_terminals + st.n_live
+            assert st.n_submits == (1 if n < 4 else 2)
+
+    def test_tear_tail_loses_only_the_final_record(self, tmp_path):
+        p = str(tmp_path / "wal.jsonl")
+        j = RequestJournal(p)
+        _submit(j, 0)
+        j.tokens(0, 0, [1, 2, 3])
+        j.tokens(0, 3, [4])               # this record will be torn
+        j.close()
+        full_size = os.path.getsize(p)
+        new_size = tear_tail(p)
+        assert new_size == os.path.getsize(p) < full_size
+        st, off = load_state(p)           # tail mode: no warning path
+        assert st.live[0]["tokens"] == [1, 2, 3]   # torn delta is gone
+        assert off <= new_size
+        # a journal REOPENED on the torn file keeps appending after the
+        # recovered offset's state (the torn bytes are inert garbage the
+        # tail scan never yields)
+        j2 = RequestJournal(p)
+        assert j2.state.live[0]["tokens"] == [1, 2, 3]
+        j2.close()
+
+
+class TestWalKinds:
+    def test_kind_constants_cover_the_schema(self):
+        assert WAL_KINDS == ("wal_submit", "wal_place", "wal_tokens",
+                             "wal_migrate", "wal_terminal")

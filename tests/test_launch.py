@@ -113,3 +113,62 @@ def test_preemption_sigterm_saves_and_resumes(tmp_path):
     out = subprocess.run(resume_args, env=env, capture_output=True, text=True,
                          timeout=240)
     assert "resumed from step" in out.stdout
+
+
+def test_watchdog_alert_emits_event_and_keeps_duration_sample(tmp_path):
+    """ISSUE 9 satellite: the watchdog's monitor thread must not race
+    ``step_end`` — an alerted step still records its duration (the old
+    implementation cleared the shared latch mid-read and dropped the
+    sample) — and each alert lands in the event stream, once per step."""
+    from repro.events import EventSink, read_events
+    from repro.launch.train import Watchdog
+
+    ev = str(tmp_path / "events.jsonl")
+    sink = EventSink(ev)
+    wd = Watchdog(factor=5.0, min_history=3, sink=sink)
+    try:
+        wd.times = [0.01] * 5             # fast history
+        wd.step_start()
+        with wd._lock:                    # the step has "run" 30 s
+            wd._started = time.time() - 30.0
+        deadline = time.time() + 5.0
+        while wd.alerts == 0 and time.time() < deadline:
+            time.sleep(0.05)
+        assert wd.alerts == 1, "watchdog never alerted"
+        time.sleep(1.2)                   # > 2 monitor periods
+        assert wd.alerts == 1             # one alert per step generation
+        n = len(wd.times)
+        wd.step_end()
+        assert len(wd.times) == n + 1     # alerted step still sampled
+        assert wd.times[-1] > 25.0
+        wd.step_start()                   # new generation re-arms
+        with wd._lock:
+            wd._started = time.time() - 30.0
+        deadline = time.time() + 5.0
+        while wd.alerts < 2 and time.time() < deadline:
+            time.sleep(0.05)
+        assert wd.alerts == 2
+        wd.step_end()
+    finally:
+        wd.close()
+        sink.close()
+    alerts = read_events(ev, kind="watchdog_alert")
+    assert len(alerts) == 2
+    assert alerts[0]["factor"] == 5.0 and alerts[0]["running_s"] > 25.0
+
+
+def test_watchdog_step_boundary_race(tmp_path):
+    """Hammer step boundaries from the main thread while the monitor
+    polls: no sample may be lost and no crash may surface regardless of
+    interleaving (lock + generation counter)."""
+    from repro.launch.train import Watchdog
+
+    wd = Watchdog(factor=1000.0, min_history=2)
+    try:
+        for _ in range(300):
+            wd.step_start()
+            wd.step_end()
+        assert len(wd.times) == 100       # rolling window, none dropped
+        assert wd.alerts == 0
+    finally:
+        wd.close()

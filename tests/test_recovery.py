@@ -1,0 +1,442 @@
+"""Durable serving (ISSUE 9): whole-router crash recovery from the
+write-ahead journal, and process-isolated replica workers.
+
+The acceptance scenario: a seeded fleet run is killed ``-9`` mid-flight
+(modelled by abandoning the Router object and force-draining the
+engines — the OS reclaimed the process; the compiled programs survive
+because the test keeps the jit cache, exactly as a restarted server
+re-warms to the same programs).  A FRESH router + reopened journal must
+finish every in-flight request token-exact vs a crash-free reference
+under greedy decoding, with one terminal per journaled SUBMIT, zero
+slot leaks, and frozen compile counts.  Crashes are also injected at
+the worst seam — between the wal_submit append and its placement — and
+into the journal file itself (torn final record).
+
+Worker tests spawn real subprocesses: ``kill()`` is a real SIGKILL, the
+stall detector reads heartbeat-backed liveness, and the breaker is
+exercised across the process boundary.
+"""
+from __future__ import annotations
+
+import os
+import shutil
+
+import jax
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.models import transformer
+from repro.serve import (DEAD, DONE, QUARANTINED, TERMINAL,
+                         AdmissionRejected, BreakerConfig, FaultPlan,
+                         FleetFaultInjector, RequestJournal, Router,
+                         ServeEngine, SimulatedCrash, WorkerProxy,
+                         crash_after_appends, spawn_worker, tear_tail)
+
+
+def _smoke_cfg():
+    return configs.smoke_config("llama3-8b")
+
+
+@pytest.fixture(scope="module")
+def llama():
+    cfg = _smoke_cfg()
+    return cfg, transformer.init_params(cfg, jax.random.PRNGKey(0))
+
+
+@pytest.fixture(scope="module")
+def engines_mod(llama):
+    """Two warmed greedy replicas, deliberately SMALL (2 slots each) so
+    the 6-request scenario is still mid-flight at the crash point."""
+    cfg, params = llama
+    out = []
+    for _ in range(2):
+        e = ServeEngine(params, cfg, max_slots=2, max_len=32,
+                        prompt_buckets=(16,), sampler_keys="request")
+        e.warmup()
+        out.append(e)
+    return out
+
+
+def _reset(engines):
+    for e in engines:
+        e.reset()
+        e.hooks.clear()
+    return engines
+
+
+def _prompts(n=6, seed=0):
+    rng = np.random.RandomState(seed)
+    vocab = _smoke_cfg().vocab
+    return [rng.randint(1, vocab, size=rng.randint(4, 9)).astype(np.int32)
+            for _ in range(n)]
+
+
+MAX_NEW = 8
+
+
+def force_drain(engines):
+    """Model ``kill -9`` of the router process: every engine-side
+    request just VANISHES (evict, then reset).  The compiled programs
+    survive — a restarted server re-warms to the same jit cache."""
+    for e in engines:
+        for rid, st in list(e.request_states().items()):
+            if st["state"] not in TERMINAL:
+                e.evict_request(rid)
+        e.reset()
+
+
+def _drive(router, guard=600):
+    while router.live_requests() > 0 and guard:
+        router.step()
+        guard -= 1
+    assert guard, "fleet failed to drain"
+
+
+def _run_reference(engines):
+    """Crash-free journal-less run: the token-exactness oracle."""
+    router = Router(_reset(engines))
+    gids = [router.submit(p, MAX_NEW) for p in _prompts()]
+    _drive(router)
+    ref = {g: list(router.request(g).tokens) for g in gids}
+    assert all(router.request(g).state == DONE for g in gids)
+    force_drain(engines)
+    return ref
+
+
+def _crash_midflight(engines, path, *, steps=4, snapshot_every=0):
+    """Journaled run killed after ``steps`` router steps; returns the
+    (closed) journal path with requests still live on disk."""
+    j = RequestJournal(path, snapshot_every=snapshot_every)
+    router = Router(_reset(engines), journal=j)
+    for p in _prompts():
+        router.submit(p, MAX_NEW)
+    for _ in range(steps):
+        router.step()
+    n_live = router.live_requests()
+    assert n_live > 0, "scenario must crash mid-flight"
+    del router                      # kill -9: no drain, no goodbye
+    force_drain(engines)
+    j.close()
+    return n_live
+
+
+# ---------------------------------------------------------------------------
+class TestCrashRecover:
+    def test_whole_router_crash_recovers_token_exact(self, engines_mod):
+        ref = _run_reference(engines_mod)
+        jp = "/tmp/test_recovery_wal_main.jsonl"
+        for stale in (jp, jp + ".snap"):
+            if os.path.exists(stale):
+                os.remove(stale)
+        compiles = [e.compile_counts() for e in engines_mod]
+        _crash_midflight(engines_mod, jp, snapshot_every=10)
+
+        j2 = RequestJournal(jp)     # reopen: snapshot + tail replay
+        router = Router(_reset(engines_mod), journal=j2)
+        info = router.recover()
+        assert info["n_recovered"] == len(ref)
+        assert info["n_recovered"] == (info["n_placed"] + info["n_done"]
+                                       + info["n_pending"])
+        assert info["n_failed"] == 0
+        _drive(router)
+
+        # token-exact under greedy: regenerated tokens (the fsync-lag
+        # window past the last durable record) match the durable prefix
+        # they extend
+        for g, toks in ref.items():
+            fr = router.request(g)
+            assert fr.state == DONE
+            assert list(fr.tokens) == toks, f"gid {g} diverged"
+        rec = router.reconcile()
+        assert rec["ok"], rec
+        assert rec["checks"]["journal_accounted"]
+        assert rec["journal"]["n_live"] == 0
+        assert rec["journal"]["n_terminals"] == len(ref)
+        fleet = router.summary()["fleet"]
+        assert fleet["n_recovered"] == len(ref)
+        assert fleet["recovery_replay_success"] == 1.0
+        assert all(e.pool.audit() for e in engines_mod)   # zero leaks
+        assert [e.compile_counts() for e in engines_mod] == compiles
+        j2.close()
+
+    def test_recover_is_idempotent(self, engines_mod):
+        jp = "/tmp/test_recovery_wal_idem.jsonl"
+        if os.path.exists(jp):
+            os.remove(jp)
+        n_live = _crash_midflight(engines_mod, jp)
+        j2 = RequestJournal(jp)
+        router = Router(_reset(engines_mod), journal=j2)
+        first = router.recover()
+        assert first["n_recovered"] == n_live
+        second = router.recover()   # run twice BEFORE driving
+        assert second["n_recovered"] == second["n_placed"] == 0
+        assert second["n_skipped"] == n_live
+        _drive(router)
+        rec = router.reconcile()
+        assert rec["ok"], rec
+        assert all(e.pool.audit() for e in engines_mod)
+        j2.close()
+
+    def test_snapshot_tail_and_full_history_recover_identically(
+            self, engines_mod, tmp_path):
+        """Satellite 3: recovery from snapshot+tail vs a full-history
+        scan of the same journal — identical terminal sets, zero slot
+        leaks either way."""
+        jp = str(tmp_path / "wal.jsonl")
+        _crash_midflight(engines_mod, jp, snapshot_every=5)
+        assert os.path.exists(jp + ".snap")
+        jp_full = str(tmp_path / "wal_full.jsonl")
+        shutil.copy(jp, jp_full)    # same records, no .snap sidecar
+
+        results = []
+        for path in (jp, jp_full):
+            j = RequestJournal(path)
+            router = Router(_reset(engines_mod), journal=j)
+            router.recover()
+            _drive(router)
+            assert router.reconcile()["ok"]
+            results.append({g: (fr.state, tuple(fr.tokens))
+                            for g, fr in sorted(router._reqs.items())})
+            assert all(e.pool.audit() for e in engines_mod)
+            force_drain(engines_mod)
+            j.close()
+        assert results[0] == results[1]
+
+    def test_crash_between_wal_append_and_placement(self, engines_mod):
+        """The worst seam: the wal_submit record is durable but the
+        router died before placing it.  Recovery must still run that
+        request to completion."""
+        jp = "/tmp/test_recovery_wal_seam.jsonl"
+        for stale in (jp, jp + ".snap"):
+            if os.path.exists(stale):
+                os.remove(stale)
+        j = RequestJournal(jp)
+        router = Router(_reset(engines_mod), journal=j)
+        prompts = _prompts()
+        for p in prompts[:-1]:
+            router.submit(p, MAX_NEW)
+        crash_after_appends(j, 1)   # next append IS the final submit
+        with pytest.raises(SimulatedCrash):
+            router.submit(prompts[-1], MAX_NEW)
+        del router
+        force_drain(engines_mod)
+        j.close()
+
+        j2 = RequestJournal(jp)
+        assert j2.state.n_live == len(prompts)   # incl. the unplaced one
+        assert j2.state.live[len(prompts) - 1]["placements"] == 0
+        router = Router(_reset(engines_mod), journal=j2)
+        info = router.recover()
+        assert info["n_recovered"] == len(prompts)
+        _drive(router)
+        fr = router.request(len(prompts) - 1)
+        assert fr.state == DONE and len(fr.tokens) == MAX_NEW
+        rec = router.reconcile()
+        assert rec["ok"] and rec["checks"]["journal_accounted"]
+        assert all(e.pool.audit() for e in engines_mod)
+        j2.close()
+
+    @pytest.mark.parametrize("crash_at", [2, 5, 9, 14])
+    def test_seeded_crash_point_sweep(self, engines_mod, tmp_path,
+                                      crash_at):
+        """Kill the router after the Nth journal append for seeded
+        arbitrary N — submit loop or step loop, placement or token
+        record, it must not matter: one terminal per journaled SUBMIT."""
+        jp = str(tmp_path / f"wal{crash_at}.jsonl")
+        j = RequestJournal(jp)
+        router = Router(_reset(engines_mod), journal=j)
+        crash_after_appends(j, crash_at)
+        with pytest.raises(SimulatedCrash):
+            for p in _prompts():
+                router.submit(p, MAX_NEW)
+            for _ in range(200):
+                router.step()
+        del router
+        force_drain(engines_mod)
+        j.close()
+
+        j2 = RequestJournal(jp)
+        n_submitted = j2.state.n_submits
+        assert n_submitted > 0
+        router = Router(_reset(engines_mod), journal=j2)
+        router.recover()
+        _drive(router)
+        rec = router.reconcile()
+        assert rec["ok"], (crash_at, rec)
+        assert rec["journal"]["n_terminals"] == n_submitted
+        assert rec["journal"]["n_live"] == 0
+        assert rec["journal"]["duplicate_terminals"] == 0
+        assert all(e.pool.audit() for e in engines_mod)
+        force_drain(engines_mod)
+        j2.close()
+
+    def test_torn_final_record_recovers(self, engines_mod, tmp_path):
+        """kill -9 mid-write: the final journal record is half a line.
+        Recovery drops exactly that record and regenerates the lost
+        tokens deterministically."""
+        jp = str(tmp_path / "wal.jsonl")
+        _crash_midflight(engines_mod, jp)
+        tear_tail(jp)
+        j2 = RequestJournal(jp)     # tail scan ignores the torn bytes
+        router = Router(_reset(engines_mod), journal=j2)
+        info = router.recover()
+        assert info["n_recovered"] > 0
+        _drive(router)
+        rec = router.reconcile()
+        assert rec["ok"] and rec["checks"]["journal_accounted"], rec
+        assert all(e.pool.audit() for e in engines_mod)
+        force_drain(engines_mod)
+        j2.close()
+
+
+# ---------------------------------------------------------------------------
+class TestSampledRecovery:
+    @pytest.fixture(scope="class")
+    def sampled_engines(self, llama):
+        cfg, params = llama
+        out = []
+        for _ in range(2):
+            e = ServeEngine(params, cfg, max_slots=2, max_len=32,
+                            prompt_buckets=(16,), temperature=0.7,
+                            top_k=8, seed=13, sampler_keys="request")
+            e.warmup()
+            out.append(e)
+        return out
+
+    def test_sampled_recovery_is_key_exact(self, sampled_engines,
+                                           tmp_path):
+        """Request-scoped keys make sampled recovery deterministic: the
+        regenerated suffix draws ``fold_in(base, gid)`` keys indexed by
+        position, so the recovered trajectory equals the uncrashed one
+        token for token — not just in distribution."""
+        ref = _run_reference(sampled_engines)
+        jp = str(tmp_path / "wal.jsonl")
+        _crash_midflight(sampled_engines, jp)
+        j2 = RequestJournal(jp)
+        router = Router(_reset(sampled_engines), journal=j2)
+        router.recover()
+        _drive(router)
+        for g, toks in ref.items():
+            fr = router.request(g)
+            assert fr.state == DONE
+            assert list(fr.tokens) == toks, f"gid {g} diverged (sampled)"
+        assert router.reconcile()["ok"]
+        assert all(e.pool.audit() for e in sampled_engines)
+        force_drain(sampled_engines)
+        j2.close()
+
+
+# ---------------------------------------------------------------------------
+WORKER_KWARGS = dict(max_slots=2, max_len=32, prompt_buckets=(16,),
+                     sampler_keys="request")
+
+
+@pytest.fixture(scope="module")
+def worker_mod():
+    """One warmed subprocess replica, shared by the healthy-path tests
+    (reset between).  Killed-worker tests spawn their own disposable."""
+    w = spawn_worker(kwargs=WORKER_KWARGS)
+    yield w
+    w.shutdown()
+
+
+class TestWorkerProxy:
+    def test_rpc_roundtrip(self, worker_mod):
+        w = worker_mod
+        w.reset()
+        assert w.ping()
+        assert w.alive and w.pid > 0
+        assert w.sampler_keys == "request" and w.temperature == 0.0
+        rid = w.submit(np.arange(1, 6, dtype=np.int32), 4)
+        guard = 50
+        while w.request_states()[rid]["state"] not in TERMINAL and guard:
+            w.step()
+            guard -= 1
+        st = w.request_states()[rid]
+        assert st["state"] == DONE and len(st["tokens"]) == 4
+        assert w.heartbeat_age() < 60.0
+        s = w.summary()
+        assert s["n_done"] == 1 and not s.get("dead")
+        assert w.compile_counts()     # warm cache shipped in the hello
+        assert w.pool.audit()
+        w.reset()
+
+    def test_worker_matches_in_process_engine(self, worker_mod,
+                                              engines_mod):
+        """Same factory recipe, same greedy tokens — the pipe is
+        transparent to the trajectory."""
+        w = worker_mod
+        w.reset()
+        e = _reset(engines_mod)[0]
+        prompt = _prompts(1, seed=3)[0]
+        out = {}
+        for eng in (w, e):
+            rid = eng.submit(prompt, 6)
+            guard = 50
+            while eng.request_states()[rid]["state"] not in TERMINAL \
+                    and guard:
+                eng.step()
+                guard -= 1
+            out[id(eng)] = list(eng.request_states()[rid]["tokens"])
+        vals = list(out.values())
+        assert vals[0] == vals[1]
+        w.reset()
+        force_drain([e])
+
+    def test_mixed_fleet_runs_and_reconciles(self, worker_mod,
+                                             engines_mod):
+        """A Router over one in-process engine and one subprocess
+        worker — the same replica interface either side of the pipe."""
+        w = worker_mod
+        w.reset()
+        engines = [_reset(engines_mod)[0], w]
+        router = Router(engines)
+        gids = [router.submit(p, 4) for p in _prompts(4, seed=5)]
+        _drive(router)
+        assert all(router.request(g).state == DONE for g in gids)
+        rec = router.reconcile()
+        assert rec["ok"], rec
+        assert router.summary()["fleet"]["n_done"] == len(gids)
+        w.reset()
+        force_drain([engines[0]])
+
+    def test_sigkill_marks_dead_and_rejects(self):
+        w = spawn_worker(kwargs=WORKER_KWARGS)
+        rid = w.submit(np.arange(1, 5, dtype=np.int32), 4)
+        w.step()
+        assert w.terminate()          # real SIGKILL
+        assert not w.alive
+        with pytest.raises(AdmissionRejected):
+            w.submit(np.arange(1, 4, dtype=np.int32), 2)
+        s = w.summary()
+        assert s.get("dead") is True
+        # the dead ledger still closes: evict flows through the mirror
+        assert w.request_states()[rid]["state"] not in (DONE,)
+        assert w.terminate() is False     # idempotent
+
+    def test_worker_sigkill_midflight_breaker_failover(self, engines_mod):
+        """The acceptance path across the process boundary: a worker is
+        SIGKILLed behind the router's back mid-run; the breaker's stall
+        detector (heartbeat-dead + holding work) quarantines it, every
+        victim finishes on the surviving replica, and the fleet
+        reconciles with zero leaks."""
+        w = spawn_worker(kwargs=WORKER_KWARGS)
+        engines = [_reset(engines_mod)[0], w]
+        breaker = BreakerConfig(window_steps=8, stall_steps=2,
+                                cooldown_steps=4)
+        router = Router(engines, breaker=breaker)
+        plan = FaultPlan().worker_sigkill(3, replica=1)
+        inj = FleetFaultInjector(router, plan)   # self-installs pre_step
+        gids = [router.submit(p, MAX_NEW) for p in _prompts(6, seed=9)]
+        _drive(router)
+        assert inj.injected["worker_sigkill"] == 1
+        assert not w.alive
+        assert router.health[1] in (QUARANTINED, DEAD)
+        for g in gids:
+            assert router.request(g).state == DONE, g
+        rec = router.reconcile()
+        assert rec["ok"], rec
+        assert engines[0].pool.audit()
+        assert w.pool.audit()         # dead ledger closed, no leaks
+        force_drain([engines[0]])
