@@ -80,7 +80,10 @@ class EventSink:
                 raise RuntimeError(f"EventSink: {self.path} is closed")
             rec = {"seq": self._seq, "t": self._clock(), "kind": kind,
                    **fields}
-            self._file.write(json.dumps(rec) + "\n")
+            # compact separators: emit sits on serving/training hot paths
+            # (span records fire every engine step when tracing is on),
+            # and the default ", " spacing costs ~15% of the dump
+            self._file.write(json.dumps(rec, separators=(",", ":")) + "\n")
             self._seq += 1
             self.emitted += 1
             self._unflushed += 1

@@ -50,6 +50,7 @@ from repro import configs
 from repro.launch.mesh import describe, make_mesh_for
 from repro.launch.train import Watchdog
 from repro.models import transformer
+from repro.obs import MemStat, Tracer
 from repro.serve import sampling
 from repro.train.serve_step import build_decode_step, build_prefill_step
 
@@ -145,6 +146,30 @@ def _open_sink(args):
     return EventSink(args.events)
 
 
+def _want_trace(args, sink) -> bool:
+    if args.trace and sink is None:
+        print("[warn] --trace requires --events; tracing disabled")
+        return False
+    return bool(args.trace)
+
+
+def _install_obs_hook(obj, sink, memstat, every: int, snapshot_fn) -> None:
+    """Chain a periodic metrics/memory emitter onto ``pre_step`` —
+    AFTER any fault injector, so neither hook clobbers the other."""
+    prev = obj.hooks.get("pre_step")
+
+    def _hook(o, _prev=prev):
+        if _prev is not None:
+            _prev(o)
+        if o.step_no and o.step_no % every == 0:
+            memstat.sample(o.step_no)
+            if sink is not None:
+                sink.emit("metrics_snapshot", snapshot=snapshot_fn(),
+                          step=o.step_no)
+
+    obj.hooks["pre_step"] = _hook
+
+
 def run_fleet(args, cfg, params, mesh=None) -> int:
     """N engine replicas behind the health-routing Router, optionally
     under the seeded chaos harness."""
@@ -193,6 +218,16 @@ def run_fleet(args, cfg, params, mesh=None) -> int:
                     max_migrations=args.max_migrations, sink=sink,
                     journal=journal,
                     journal_tokens_every=args.journal_tokens_every)
+    if _want_trace(args, sink):
+        # tracers attach POST-warmup (the warmup probe must not trace)
+        # and BEFORE recover() so recovery replay gets root spans
+        for i, e in enumerate(engines):
+            e.tracer = Tracer(sink, pid=f"r{i}")
+        router.tracer = Tracer(sink, pid="router")
+        if journal is not None:
+            journal.tracer = Tracer(sink, pid="journal")
+        print("trace: span records -> events "
+              "(render with tools/tracelens.py)")
     if args.recover:
         if journal is None:
             print("--recover needs --journal")
@@ -209,6 +244,13 @@ def run_fleet(args, cfg, params, mesh=None) -> int:
         FleetFaultInjector(router, plan)
         print(f"chaos: seed {args.chaos_seed} -> "
               f"{dict(plan.counts())}")
+    memstat = None
+    if args.metrics_every:
+        memstat = MemStat(sink=sink,
+                          plan_bytes=(int(args.mem_budget_mb * 2**20)
+                                      or None))
+        _install_obs_hook(router, sink, memstat, args.metrics_every,
+                          router.registry_snapshot)
     trace = _make_trace(args, cfg, engines[0])
     t0 = time.time()
     summary = router.run(trace)
@@ -229,6 +271,8 @@ def run_fleet(args, cfg, params, mesh=None) -> int:
     if fleet["n_recovered"]:
         print(f"recovery: {fleet['n_recovered']} recovered, replay "
               f"success {fleet['recovery_replay_success']:.2f}")
+    if memstat is not None and memstat.samples:
+        print(memstat.banner())
     if journal is not None:
         st = journal.state
         print(f"journal: {journal.appends} appends, "
@@ -281,6 +325,17 @@ def run_engine(args, cfg, params, mesh=None) -> int:
     t0 = time.time()
     compiles = engine.warmup()
     print(f"warmup: {time.time()-t0:.1f}s, programs={compiles}")
+    if _want_trace(args, sink):
+        engine.tracer = Tracer(sink, pid="r0")   # post-warmup attach
+        print("trace: span records -> events "
+              "(render with tools/tracelens.py)")
+    memstat = None
+    if args.metrics_every:
+        memstat = MemStat(sink=sink,
+                          plan_bytes=budget,
+                          registry=engine.metrics.registry)
+        _install_obs_hook(engine, sink, memstat, args.metrics_every,
+                          engine.metrics.registry_snapshot)
 
     trace = _make_trace(args, cfg, engine)
     t0 = time.time()
@@ -311,6 +366,8 @@ def run_engine(args, cfg, params, mesh=None) -> int:
               f"retries {summary['n_retried']}); "
               f"goodput {summary['goodput_tokens_per_s']:.1f} tok/s "
               f"of {summary['tokens_per_s']:.1f}")
+    if memstat is not None and memstat.samples:
+        print(memstat.banner())
     if sink is not None:
         sink.close()
     if summary["stalled"]:
@@ -454,6 +511,15 @@ def main():
     ap.add_argument("--events", default="",
                     help="append fault/health/failover events to this "
                          "JSONL file (repro.events.EventSink)")
+    ap.add_argument("--metrics-every", type=int, default=0,
+                    help="every N steps: sample live-array bytes "
+                         "(mem_sample) and emit a metrics_snapshot of "
+                         "the obs registry to --events (0 = off)")
+    ap.add_argument("--trace", action="store_true",
+                    help="emit span_begin/span_end records (queue / "
+                         "prefill / decode / migrate / journal / rpc) "
+                         "to --events; tools/tracelens.py renders "
+                         "per-request timelines and Perfetto JSON")
     # -- replica fleet (router) --------------------------------------------
     ap.add_argument("--replicas", type=int, default=1,
                     help="fleet: engine replicas behind the router "

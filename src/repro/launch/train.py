@@ -42,6 +42,7 @@ from repro.data.synthetic import token_stream
 from repro.events import EventSink
 from repro.launch.mesh import describe, make_mesh_for
 from repro.models import transformer
+from repro.obs import MemStat, MetricsRegistry, Tracer, maybe_span
 from repro.optim import adamw
 from repro.train.guards import GuardConfig, TrainGuard
 from repro.train.train_step import TrainConfig, make_train_step
@@ -153,7 +154,7 @@ def _auto_remat(cfg, args, mesh, batch_sds) -> CheckpointConfig:
           f"peak {rep['peak_bytes']/2**20:.1f} MiB/device "
           f"(no-remat {rep['no_remat_bytes']/2**20:.1f} MiB, "
           f"recompute >= {rep['recompute_frac']*100:.0f}% of fwd FLOPs)")
-    return remat
+    return remat, int(rep["peak_bytes"])
 
 
 def run(args):
@@ -193,9 +194,10 @@ def run(args):
     remat_mode = "off" if args.no_remat else args.remat
     if remat_mode == "off" and args.mem_budget_mb > 0:
         print("[warn] --mem-budget-mb ignored with remat off")
+    plan_bytes = None                     # activation budget (MemStat score)
     if remat_mode == "auto" or (remat_mode == "on" and args.mem_budget_mb > 0):
         # a budget implies the planner even without an explicit --remat auto
-        remat = _auto_remat(cfg, args, mesh, batch_sds)
+        remat, plan_bytes = _auto_remat(cfg, args, mesh, batch_sds)
     else:
         remat = CheckpointConfig(enabled=remat_mode != "off",
                                  policy=args.remat_policy)
@@ -248,19 +250,27 @@ def run(args):
 
     def save(step):
         # `step` here = number of completed steps; resume continues there
-        mgr.save(step, {"params": params, "opt": opt},
-                 extra={"step": step, "data_state": data_state,
-                        "loss_scale": float(ls.scale),
-                        "arch": cfg.arch_id},
-                 config=cfg.arch_id)
+        with maybe_span(tracer, "checkpoint", step=step, op="save"):
+            mgr.save(step, {"params": params, "opt": opt},
+                     extra={"step": step, "data_state": data_state,
+                            "loss_scale": float(ls.scale),
+                            "arch": cfg.arch_id},
+                     config=cfg.arch_id)
 
     sink = EventSink(args.events) if args.events else None
+    if args.trace and sink is None:
+        print("[warn] --trace requires --events; tracing disabled")
+    registry = MetricsRegistry()
+    tracer = Tracer(sink, pid="train") if args.trace and sink is not None \
+        else None
+    memstat = MemStat(sink=sink, registry=registry, plan_bytes=plan_bytes)
     guard = None
     if args.guard:
         guard = TrainGuard(GuardConfig(
             window=args.guard_window,
             spike_factor=args.guard_spike_factor,
-            rollback_after=args.guard_rollback_after), sink=sink)
+            rollback_after=args.guard_rollback_after), sink=sink,
+            registry=registry)
         print(f"guard: skip non-finite steps in-jit; loss spike > "
               f"{args.guard_spike_factor}x rolling median; "
               f"{args.guard_rollback_after} consecutive bad steps -> "
@@ -272,13 +282,20 @@ def run(args):
     step = start_step
     try:
         while step < args.steps:
-            data_state, batch = next(data)
+            with maybe_span(tracer, "data", step=step):
+                data_state, batch = next(data)
             wd.step_start()
-            params, opt, ls, metrics = step_fn(params, opt, ls, batch)
-            verdict = TrainGuard.OK
-            if guard is not None:
-                verdict = guard.observe(float(metrics["loss"]),  # sync
-                                        bool(metrics["grads_finite"]))
+            with maybe_span(tracer, "train_step", step=step):
+                params, opt, ls, metrics = step_fn(params, opt, ls, batch)
+                verdict = TrainGuard.OK
+                if guard is not None:
+                    # the loss sync closes the step: the span measures
+                    # dispatch + device time, not just dispatch
+                    with maybe_span(tracer, "guard", step=step):
+                        verdict = guard.observe(
+                            float(metrics["loss"]),  # sync
+                            bool(metrics["grads_finite"]),
+                            grad_norm=float(metrics["grad_norm"]))
             if verdict == TrainGuard.ROLLBACK:
                 wd.step_end()
                 if guard.rollbacks > args.guard_max_rollbacks:
@@ -300,11 +317,13 @@ def run(args):
                     opt = jax.device_put(adamw.init(params), shards["opt"])
                     step, data_state = 0, 0
                 else:
-                    restored, extra = mgr.restore(
-                        latest, {"params": params, "opt": opt},
-                        shardings={"params": shards["params"],
-                                   "opt": shards["opt"]},
-                        config=cfg.arch_id)
+                    with maybe_span(tracer, "checkpoint", step=latest,
+                                    op="restore"):
+                        restored, extra = mgr.restore(
+                            latest, {"params": params, "opt": opt},
+                            shardings={"params": shards["params"],
+                                       "opt": shards["opt"]},
+                            config=cfg.arch_id)
                     params, opt = restored["params"], restored["opt"]
                     step = extra.get("step", latest)
                     data_state = extra.get("data_state", 0)
@@ -331,6 +350,12 @@ def run(args):
             wd.step_end()
             data_state += 1
             step += 1
+            if args.metrics_every and step % args.metrics_every == 0:
+                # host-side only: live-array walk + registry snapshot,
+                # never a device sync
+                memstat.sample(step)
+                if sink is not None:
+                    registry.emit(sink, step=step)
             healthy = guard is None or guard.bad_streak == 0
             if step % args.ckpt_every == 0 and healthy:
                 # never checkpoint mid-bad-streak: the rollback target
@@ -349,6 +374,8 @@ def run(args):
             signal.signal(s, h)
     if guard is not None:
         print(f"guard: {guard.counters()}")
+    if memstat.samples:
+        print(memstat.banner())
     print("done")
     return 0
 
@@ -409,6 +436,14 @@ def main():
     ap.add_argument("--events", default=None,
                     help="append-only JSONL event log (repro.events): "
                          "guard verdicts stream here for post-mortems")
+    ap.add_argument("--metrics-every", type=int, default=0,
+                    help="every N steps: sample live-array bytes "
+                         "(mem_sample) and emit a metrics_snapshot of "
+                         "the obs registry to --events (0 = off)")
+    ap.add_argument("--trace", action="store_true",
+                    help="emit span_begin/span_end records (data / "
+                         "train_step / guard / checkpoint) to --events; "
+                         "tools/tracelens.py renders the timeline")
     return run(ap.parse_args())
 
 

@@ -1,0 +1,69 @@
+"""Planner-vs-live memory reconciliation.
+
+The planner (``repro.plan``) predicts peak bytes; nothing so far checked
+the prediction against what is actually resident.  ``MemStat.sample``
+sums ``jax.live_arrays()`` (host-visible handle bytes — the honest
+"what is still alive" number on every backend, including the CPU CI
+where ``device.memory_stats()`` is None), folds in allocator stats when
+the backend exposes them, and scores the result against the plan
+budget: ``mem_sample`` events carry ``frac_of_plan`` so a trace shows
+exactly when live bytes cross the planned peak.
+"""
+from __future__ import annotations
+
+
+class MemStat:
+    def __init__(self, *, sink=None, registry=None, plan_bytes=None,
+                 replica=None) -> None:
+        self.sink = sink
+        self.registry = registry
+        self.plan_bytes = plan_bytes
+        self.replica = replica
+        self.peak_bytes = 0
+        self.samples = 0
+
+    def sample(self, step: int) -> dict:
+        import jax
+
+        live = n = 0
+        try:
+            for a in jax.live_arrays():
+                live += a.nbytes
+                n += 1
+        except Exception:            # backend without live_arrays support
+            live = n = -1
+        dev_peak = None
+        try:
+            stats = jax.devices()[0].memory_stats()
+            if stats:
+                dev_peak = int(stats.get("peak_bytes_in_use", 0))
+        except Exception:            # CPU backend: memory_stats is None
+            pass
+        rec = {"step": step, "live_bytes": live, "n_arrays": n}
+        if dev_peak is not None:
+            rec["device_peak_bytes"] = dev_peak
+        if self.plan_bytes:
+            rec["plan_bytes"] = int(self.plan_bytes)
+            rec["frac_of_plan"] = round(live / self.plan_bytes, 4) \
+                if live >= 0 else None
+        if self.replica is not None:
+            rec["replica"] = self.replica
+        self.samples += 1
+        if live > self.peak_bytes:
+            self.peak_bytes = live
+        if self.registry is not None:
+            self.registry.set("mem.live_bytes", live)
+            self.registry.observe("mem.live_mb", live / 2**20)
+        if self.sink is not None:
+            self.sink.emit("mem_sample", **rec)
+        return rec
+
+    def banner(self) -> str:
+        """One line for the launch banner."""
+        peak_mb = self.peak_bytes / 2**20
+        if self.plan_bytes:
+            return (f"mem: live peak {peak_mb:.1f} MB, plan "
+                    f"{self.plan_bytes / 2**20:.1f} MB "
+                    f"({self.peak_bytes / self.plan_bytes:.2f}x) "
+                    f"over {self.samples} samples")
+        return f"mem: live peak {peak_mb:.1f} MB over {self.samples} samples"

@@ -133,6 +133,7 @@ class ServeEngine:
         #: host-side interception points around the jit boundaries (the
         #: fault-injection seam; see module docstring) — never compiled
         self.hooks: dict[str, Callable] = {}
+        self._tracer = None               # repro.obs.Tracer via .tracer
         self.capacity_report = None
         if mem_budget_bytes is not None:
             from repro import plan as plan_mod
@@ -345,6 +346,27 @@ class ServeEngine:
     def step_no(self) -> int:
         return self._step_no
 
+    @property
+    def tracer(self):
+        """repro.obs Tracer, or None (tracing off — the default).  All
+        span emission is host-side and guarded on this being set, so the
+        untraced path pays nothing and nothing traced runs inside jit.
+        Attach AFTER ``warmup()`` (the warmup probe would otherwise leave
+        a phantom rid-0 trace)."""
+        return self._tracer
+
+    @tracer.setter
+    def tracer(self, t) -> None:
+        self._tracer = t
+        self.scheduler.tracer = t         # queue-wait spans live there
+
+    def _end_req_span(self, req: Request, state: str) -> None:
+        """Close a request's open decode + root spans at terminal time."""
+        if self._tracer is not None:
+            self._tracer.end(req.span_ids.pop("decode", None), state=state)
+            self._tracer.end(req.span_ids.pop("req", None), state=state,
+                             tokens=len(req.tokens))
+
     def submit(self, prompt, max_new_tokens: int,
                eos_id: Optional[int] = None,
                arrival_step: Optional[int] = None,
@@ -391,10 +413,18 @@ class ServeEngine:
             raise ValueError(f"request {req.rid}: prompt+gen "
                              f"{req.total_len()} exceeds max_len "
                              f"{self.max_len}")
+        if self._tracer is not None:
+            req.span_ids["req"] = self._tracer.begin(
+                "req", trace=self._kid(req), rid=req.rid,
+                prompt_len=req.prompt_len, max_new_tokens=max_new_tokens,
+                replay=bool(emitted))
         try:
             self.scheduler.submit(req, front=front)
         except AdmissionRejected:
             self.metrics.on_reject()
+            if self._tracer is not None:
+                self._tracer.end(req.span_ids.pop("req", None),
+                                 state="REJECTED", tokens=0)
             raise
         self._next_rid += 1
         self._requests[req.rid] = req
@@ -419,6 +449,7 @@ class ServeEngine:
             self.scheduler.retire(req, state=state)
             self._evict(req)
         self.metrics.on_terminal(rid, state)
+        self._end_req_span(req, state)
         return req
 
     def cancel(self, rid: int) -> bool:
@@ -520,6 +551,7 @@ class ServeEngine:
             byte_budget=self.scheduler.byte_budget,
             max_prefill_per_step=self.scheduler.max_prefill_per_step,
             max_queue=self.scheduler.max_queue)
+        self.scheduler.tracer = self._tracer
         self.metrics = ServeMetrics(sink=self.metrics.sink,
                                     replica=self.metrics.replica)
         self._draws = 0
@@ -596,6 +628,7 @@ class ServeEngine:
             self.metrics.on_done(req.rid)
             self._evict(req)
             self._requests_done.append(req)
+            self._end_req_span(req, req.state)
 
     def _replay_prompt(self, req: Request) -> np.ndarray:
         """Prompt + already-emitted (healthy) tokens: the deterministic
@@ -616,6 +649,9 @@ class ServeEngine:
         prefix exact."""
         slot = req.slot
         self.metrics.on_fault(req.rid)
+        if self._tracer is not None:
+            self._tracer.end(req.span_ids.pop("decode", None), state="FAULT",
+                             fault=True)
         self.pool.quarantine(slot)
         self._active_buf[slot] = False
         self._active_dev = self._leave_fn(self._active_dev, jnp.int32(slot))
@@ -635,6 +671,7 @@ class ServeEngine:
             self.scheduler.retire(req, state=FAILED)
             req.fail_reason = reason
             self.metrics.on_terminal(req.rid, FAILED)
+            self._end_req_span(req, FAILED)
             return
         req.retries += 1
         # backoff: the replay waits retries * backoff steps at the head
@@ -649,13 +686,20 @@ class ServeEngine:
         hook = self.hooks.get("pre_step")
         if hook is not None:
             hook(self)
+        step_sid = None if self._tracer is None else \
+            self._tracer.begin("step", step=self._step_no)
         for req in self.scheduler.shed_expired(self._step_no):
             self.metrics.on_terminal(req.rid, req.state)
+            self._end_req_span(req, req.state)
 
         admitted = [] if self._draining else \
             self.scheduler.pop_admissible(self.pool.free_slots, self._step_no)
         scatter_ok = self.hooks.get("scatter_filter")
         for req in admitted:
+            if self._tracer is not None:
+                req.span_ids["prefill"] = self._tracer.begin(
+                    "prefill", trace=self._kid(req),
+                    parent=req.span_ids.get("req"))
             slot = self.pool.alloc()
             assert slot is not None       # pop_admissible checked free_slots
             prompt = self._replay_prompt(req)   # == req.prompt first time
@@ -687,7 +731,16 @@ class ServeEngine:
                     self._tokens_dev, self._active_dev, jnp.int32(slot),
                     jnp.int32(tok))
             self._active_buf[slot] = True
+            if self._tracer is not None:
+                # prefill closes at the first sampled token (the TTFT
+                # edge); decode residency is its own span from here
+                self._tracer.end(req.span_ids.pop("prefill", None),
+                                 bucket=b, plen=plen, slot=int(slot))
             self._emit(req, tok)          # first token: the TTFT sample
+            if self._tracer is not None and req.state == DECODE:
+                req.span_ids["decode"] = self._tracer.begin(
+                    "decode", trace=self._kid(req),
+                    parent=req.span_ids.get("req"), slot=int(slot))
 
         if self._active_buf.any():
             hook = self.hooks.get("pre_decode")
@@ -715,6 +768,9 @@ class ServeEngine:
 
         self.metrics.on_step(self._step_no, self.scheduler.queue_depth,
                              self.pool.occupancy)
+        if self._tracer is not None:
+            self._tracer.end(step_sid, admitted=len(admitted),
+                             occupancy=self.pool.occupancy)
         self._step_no += 1
 
     def request_states(self) -> dict:

@@ -195,10 +195,20 @@ class RequestJournal:
         #: crash-at-every-point seam: fn(journal, kind, rec), called
         #: AFTER the record is durable and reduced into ``state``
         self.hooks: dict[str, Callable] = {}
+        #: optional repro.obs Tracer: every append (and its group-commit
+        #: fsync) becomes a ``journal_append`` span on the event stream,
+        #: so WAL latency shows up in the same timeline as the requests
+        #: paying for it
+        self.tracer = None
 
     # -- append side -------------------------------------------------------
     def _append(self, kind: str, **fields) -> None:
-        self._sink.emit(kind, **fields)
+        if self.tracer is not None:
+            with self.tracer.span("journal_append", trace=fields.get("gid"),
+                                  wal=kind):
+                self._sink.emit(kind, **fields)
+        else:
+            self._sink.emit(kind, **fields)
         self.state.apply(kind, fields)
         self.appends += 1
         hook = self.hooks.get("post_append")
@@ -237,6 +247,8 @@ class RequestJournal:
         """Atomically write the compaction snapshot (state + covered
         offset) to ``path + ".snap"``.  Recovery after this point reads
         the snapshot plus only the journal tail."""
+        sid = None if self.tracer is None else \
+            self.tracer.begin("journal_snapshot", live=self.state.n_live)
         offset = self._sink.tell()
         tmp = self.path + ".snap.tmp"
         with open(tmp, "w") as f:
@@ -245,6 +257,8 @@ class RequestJournal:
             os.fsync(f.fileno())
         os.replace(tmp, self.path + ".snap")
         self.snapshots += 1
+        if self.tracer is not None:
+            self.tracer.end(sid, offset=offset)
         return self.path + ".snap"
 
     def close(self) -> None:

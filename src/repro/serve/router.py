@@ -88,6 +88,7 @@ from typing import Callable, Optional, Sequence
 
 import numpy as np
 
+from repro.obs.registry import MetricsRegistry
 from repro.serve.metrics import fleet_summary
 from repro.serve.scheduler import (CANCELLED, DONE, DROPPED, FAILED,
                                    MIGRATED, QUEUED, TERMINAL,
@@ -139,6 +140,8 @@ class FleetRequest:
     tokens: list = dataclasses.field(default_factory=list)
     migrations: int = 0                   # successful re-placements
     placements: list = dataclasses.field(default_factory=list)
+    # open span ids ("fleet_req"/"migrate") when tracing is on
+    span_ids: dict = dataclasses.field(default_factory=dict)
 
 
 class Router:
@@ -186,9 +189,14 @@ class Router:
         self._stalled: list[int] = [0] * n     # consecutive no-progress
         self._quarantined_at: list[Optional[int]] = [None] * n
         self._paused: list[int] = [0] * n      # replica_slow countdown
-        self.rejected = 0                      # fleet-level backpressure
-        self.failovers = 0                     # crash/quarantine/FAILED moves
-        self.migrations = 0                    # successful re-placements
+        #: fleet-scope metrics (rejected/failovers/migrations/health
+        #: transitions); per-replica registries merge in via
+        #: ``registry_snapshot()``
+        self.registry = MetricsRegistry()
+        #: optional repro.obs Tracer for fleet_req/place/migrate/recover
+        #: spans — attach before submitting (every emission is guarded,
+        #: so leaving it None costs nothing)
+        self.tracer = None
         self.time_in_quarantine: list[int] = [0] * n
         #: write-ahead request journal (attach at construction so every
         #: SUBMIT is journaled — a mid-run attach would leave earlier
@@ -203,6 +211,33 @@ class Router:
         self._recovered_done = 0        # DONE straight from the journal
         self._journal_recovered: list[int] = []   # gids recover() rebuilt
 
+    # legacy counters, now registry-backed ----------------------------------
+    @property
+    def rejected(self) -> int:             # fleet-level backpressure
+        return self.registry.count("fleet.rejected")
+
+    @property
+    def failovers(self) -> int:            # crash/quarantine/FAILED moves
+        return self.registry.count("fleet.failovers")
+
+    @property
+    def migrations(self) -> int:           # successful re-placements
+        return self.registry.count("fleet.migrations")
+
+    def registry_snapshot(self) -> dict:
+        """Fleet-wide registry view: the router's own counters merged
+        with every replica's snapshot — across the RPC boundary for
+        subprocess workers (their ``_MetricsView`` caches the snapshot
+        from the last harvest, so a dead worker's last-known metrics
+        still count)."""
+        snap = self.registry.snapshot()
+        for e in self.engines:
+            get = getattr(e.metrics, "registry_snapshot", None)
+            s = get() if get is not None else None
+            if s:
+                snap = MetricsRegistry.merge(snap, s)
+        return snap
+
     # -- events ------------------------------------------------------------
     def _event(self, kind: str, **fields) -> None:
         if self.sink is not None:
@@ -213,6 +248,7 @@ class Router:
             return
         self._event("health", replica=i, frm=self.health[i], to=state,
                     reason=reason)
+        self.registry.inc(f"fleet.health.{state}")
         self.health[i] = state
 
     def _fleet_terminal(self, fr: FleetRequest, state: str,
@@ -224,6 +260,11 @@ class Router:
         self._event("fleet_terminal", gid=fr.gid, state=state, **fields)
         if self.journal is not None:
             self.journal.terminal(fr.gid, state, n_tokens=len(fr.tokens))
+        if self.tracer is not None:
+            self.tracer.end(fr.span_ids.pop("migrate", None), state=state)
+            self.tracer.end(fr.span_ids.pop("recover", None), state=state)
+            self.tracer.end(fr.span_ids.pop("fleet_req", None), state=state,
+                            tokens=len(fr.tokens))
 
     # -- placement ---------------------------------------------------------
     @property
@@ -250,26 +291,40 @@ class Router:
         """Try to put ``fr`` on some accepting replica.  Returns False
         when every candidate rejected (callers decide between fleet
         backpressure and the pending-migration queue)."""
-        for i in self._rank(self._accepting()):
-            try:
-                rid = self.engines[i].submit(
-                    fr.prompt, fr.max_new_tokens, eos_id=fr.eos_id,
-                    deadline_steps=fr.deadline_steps, front=front,
-                    key_id=fr.gid,
-                    emitted=fr.tokens if fr.tokens else None)
-            except AdmissionRejected:
-                continue
-            if self.policy == "round_robin":
-                self._rr = (i + 1) % len(self.engines)
-            fr.replica, fr.local_rid = i, rid
-            fr.placements.append((i, rid))
-            self._local2gid[i][rid] = fr.gid
-            self._event("place", gid=fr.gid, replica=i, rid=rid,
-                        front=front, emitted=len(fr.tokens))
-            if self.journal is not None:
-                self.journal.place(fr.gid, i, rid, front=front,
-                                   emitted=len(fr.tokens))
-            return True
+        sid = None if self.tracer is None else self.tracer.begin(
+            "place", trace=fr.gid, parent=fr.span_ids.get("fleet_req"),
+            front=front)
+        try:
+            for i in self._rank(self._accepting()):
+                try:
+                    rid = self.engines[i].submit(
+                        fr.prompt, fr.max_new_tokens, eos_id=fr.eos_id,
+                        deadline_steps=fr.deadline_steps, front=front,
+                        key_id=fr.gid,
+                        emitted=fr.tokens if fr.tokens else None)
+                except AdmissionRejected:
+                    continue
+                if self.policy == "round_robin":
+                    self._rr = (i + 1) % len(self.engines)
+                fr.replica, fr.local_rid = i, rid
+                fr.placements.append((i, rid))
+                self._local2gid[i][rid] = fr.gid
+                self._event("place", gid=fr.gid, replica=i, rid=rid,
+                            front=front, emitted=len(fr.tokens))
+                if self.journal is not None:
+                    self.journal.place(fr.gid, i, rid, front=front,
+                                       emitted=len(fr.tokens))
+                if self.tracer is not None:
+                    self.tracer.end(sid, placed=True, replica=i, rid=rid)
+                return True
+        except ValueError:
+            # replay prompt outgrew the buckets — close the span before
+            # the caller escalates to a fleet-level FAILED
+            if self.tracer is not None:
+                self.tracer.end(sid, placed=False, error="bucket")
+            raise
+        if self.tracer is not None:
+            self.tracer.end(sid, placed=False)
         return False
 
     def submit(self, prompt, max_new_tokens: int,
@@ -282,6 +337,10 @@ class Router:
                           prompt=np.asarray(prompt, np.int32),
                           max_new_tokens=max_new_tokens, eos_id=eos_id,
                           deadline_steps=deadline_steps)
+        if self.tracer is not None:
+            fr.span_ids["fleet_req"] = self.tracer.begin(
+                "fleet_req", trace=fr.gid, prompt_len=len(fr.prompt),
+                max_new_tokens=max_new_tokens)
         if self.journal is not None:
             # WRITE-AHEAD: the submit hits disk BEFORE placement, so a
             # crash between the two still recovers the request — which
@@ -290,11 +349,14 @@ class Router:
             self.journal.submit(fr.gid, fr.prompt, fr.max_new_tokens,
                                 fr.eos_id, fr.deadline_steps)
         if not self._place(fr, front=False):
-            self.rejected += 1
+            self.registry.inc("fleet.rejected")
             self._event("fleet_reject", gid=fr.gid)
             if self.journal is not None:
                 self._next_gid += 1
                 self.journal.terminal(fr.gid, "REJECTED")
+            if self.tracer is not None:
+                self.tracer.end(fr.span_ids.pop("fleet_req", None),
+                                state="REJECTED", tokens=0)
             raise AdmissionRejected(
                 f"Router: every accepting replica rejected request "
                 f"{fr.gid} (fleet backpressure)")
@@ -326,9 +388,16 @@ class Router:
                 fr, FAILED,
                 reason=f"migration budget exhausted ({reason})")
             return
-        self.failovers += 1
+        self.registry.inc("fleet.failovers")
         self._event("failover", gid=fr.gid, reason=reason,
                     emitted=len(fr.tokens))
+        if self.tracer is not None and "migrate" not in fr.span_ids:
+            # one migrate span covers failover -> successful re-placement,
+            # including any time parked in the pending queue
+            fr.span_ids["migrate"] = self.tracer.begin(
+                "migrate", trace=fr.gid,
+                parent=fr.span_ids.get("fleet_req"), reason=reason,
+                emitted=len(fr.tokens))
         if self.journal is not None:
             self.journal.migrate(fr.gid, reason)
         try:
@@ -341,7 +410,10 @@ class Router:
             return
         if placed:
             fr.migrations += 1
-            self.migrations += 1
+            self.registry.inc("fleet.migrations")
+            if self.tracer is not None:
+                self.tracer.end(fr.span_ids.pop("migrate", None),
+                                replica=fr.replica)
         else:
             self._pending.append(fr)      # retried every router step
 
@@ -457,6 +529,18 @@ class Router:
             self._journal_recovered.append(gid)
             info["n_recovered"] += 1
             self._event("recover", gid=gid, emitted=len(fr.tokens))
+            if self.tracer is not None:
+                # recovered requests get a fresh root span (the crashed
+                # router's span died open with it); replay=True marks the
+                # timeline as a post-recovery continuation
+                fr.span_ids["fleet_req"] = self.tracer.begin(
+                    "fleet_req", trace=fr.gid, prompt_len=len(fr.prompt),
+                    max_new_tokens=fr.max_new_tokens, replay=True,
+                    emitted=len(fr.tokens))
+                fr.span_ids["recover"] = self.tracer.begin(
+                    "recover", trace=fr.gid,
+                    parent=fr.span_ids["fleet_req"],
+                    emitted=len(fr.tokens))
             if len(fr.tokens) >= fr.max_new_tokens:
                 # complete on disk — the engine would (rightly) reject
                 # an emitted prefix that leaves nothing to generate
@@ -476,6 +560,9 @@ class Router:
                 info["n_failed"] += 1
                 continue
             if placed:
+                if self.tracer is not None:
+                    self.tracer.end(fr.span_ids.pop("recover", None),
+                                    replica=fr.replica)
                 info["n_placed"] += 1
             else:
                 self._pending.append(fr)
@@ -607,7 +694,12 @@ class Router:
                 continue
             if placed:
                 fr.migrations += 1
-                self.migrations += 1
+                self.registry.inc("fleet.migrations")
+                if self.tracer is not None:
+                    self.tracer.end(fr.span_ids.pop("migrate", None),
+                                    replica=fr.replica)
+                    self.tracer.end(fr.span_ids.pop("recover", None),
+                                    replica=fr.replica)
             else:
                 self._pending.append(fr)
         self._step_no += 1

@@ -69,6 +69,8 @@ class Request:
     tokens: list[int] = dataclasses.field(default_factory=list)
     retries: int = 0                      # replay attempts consumed
     fail_reason: Optional[str] = None     # set on FAILED
+    # open span ids by name ("req"/"queue"/"decode") when tracing is on
+    span_ids: dict = dataclasses.field(default_factory=dict)
 
     def __post_init__(self):
         self.prompt = np.asarray(self.prompt, np.int32)
@@ -120,6 +122,28 @@ class Scheduler:
         self.rejected = 0
         self.terminal_counts = {DONE: 0, CANCELLED: 0, DROPPED: 0,
                                 FAILED: 0, MIGRATED: 0}
+        #: optional repro.obs Tracer; queue-wait spans are owned here
+        #: because every QUEUED<->resident transition runs through the
+        #: scheduler, so TTFT's queue segment can't drift from the real
+        #: state machine
+        self.tracer = None
+
+    # -- queue-wait spans --------------------------------------------------
+    @staticmethod
+    def _tid(req: Request):
+        # the trace id spans carry: the fleet gid when the router set one
+        # (key_id), else the local rid — same rule as the sampler keys
+        return req.key_id if req.key_id is not None else req.rid
+
+    def _queue_begin(self, req: Request, reason: str) -> None:
+        if self.tracer is not None:
+            req.span_ids["queue"] = self.tracer.begin(
+                "queue", trace=self._tid(req),
+                parent=req.span_ids.get("req"), reason=reason)
+
+    def _queue_end(self, req: Request, **attrs) -> None:
+        if self.tracer is not None:
+            self.tracer.end(req.span_ids.pop("queue", None), **attrs)
 
     # ----------------------------------------------------------------------
     def submit(self, req: Request, *, front: bool = False) -> None:
@@ -138,6 +162,7 @@ class Scheduler:
             self._queue.appendleft(req)
         else:
             self._queue.append(req)
+        self._queue_begin(req, "replay" if front else "submit")
 
     @property
     def queue_depth(self) -> int:
@@ -170,6 +195,7 @@ class Scheduler:
                     and now_step - req.arrival_step > req.deadline_steps):
                 req.state = DROPPED
                 self.terminal_counts[DROPPED] += 1
+                self._queue_end(req, state=DROPPED)
                 shed.append(req)
             else:
                 keep.append(req)
@@ -188,6 +214,7 @@ class Scheduler:
         self._queue.remove(req)
         req.state = state
         self.terminal_counts[state] += 1
+        self._queue_end(req, state=state)
 
     def cancel_queued(self, req: Request) -> None:
         """Remove a still-queued request from the line -> ``CANCELLED``."""
@@ -212,6 +239,7 @@ class Scheduler:
             self._resident += 1
             self.admitted += 1
             free_slots -= 1
+            self._queue_end(req, state=PREFILL)
             out.append(req)
         return out
 
@@ -227,6 +255,7 @@ class Scheduler:
         self._resident -= 1
         assert self._resident >= 0, "scheduler resident count underflow"
         self._queue.appendleft(req)
+        self._queue_begin(req, "replay")
 
     def retire(self, req: Request, state: str = DONE) -> None:
         """Move a resident request to a terminal state (default DONE)."""

@@ -110,6 +110,9 @@ def _snapshot(engine) -> dict:
         "requests": engine.request_states(),
         "metrics": {"faults": m.faults, "tokens_emitted": m.tokens_emitted,
                     "rejected": m.rejected, "retries": m.retries},
+        # full obs registry (counters + streaming histograms): the proxy
+        # keeps the latest copy so fleet metrics survive a SIGKILL
+        "registry": m.registry_snapshot(),
         "sched": {"queue_depth": s.queue_depth, "resident": s.resident},
         "pool": {"free_slots": p.free_slots, "occupancy": p.occupancy,
                  "allocs": p.allocs, "frees": p.frees,
@@ -263,6 +266,14 @@ class _MetricsView:
         self.tokens_emitted = 0
         self.rejected = 0
         self.retries = 0
+        # last absorbed registry snapshot; persists after death so the
+        # dead replica's histograms still merge into the fleet view
+        self._registry_snap: Optional[dict] = None
+
+    def registry_snapshot(self) -> dict:
+        if self._registry_snap is None:
+            return {"counters": {}, "gauges": {}, "hists": {}}
+        return self._registry_snap
 
 
 class _ReqView:
@@ -302,6 +313,9 @@ class WorkerProxy:
         self._last_beat = time.monotonic()
         self.metrics = _MetricsView()
         self.scheduler = _SchedView(max_queue=None)
+        #: optional repro.obs Tracer: each RPC round-trip becomes an
+        #: ``rpc`` span, so cross-process overhead shows on the timeline
+        self.tracer = None
 
         env = dict(os.environ)
         src = os.path.dirname(os.path.dirname(
@@ -423,12 +437,18 @@ class WorkerProxy:
         the router then sees frozen counters, not an exception."""
         if not self.alive:
             return None
+        sid = None if self.tracer is None else \
+            self.tracer.begin("rpc", op=op)
         try:
             _write_frame(self._proc.stdin, {"op": op, **kw})
             reply = self._read_frame(self.rpc_timeout_s)
         except (OSError, EOFError, TimeoutError) as e:
             self._mark_dead(f"{type(e).__name__} during {op!r}")
+            if self.tracer is not None:
+                self.tracer.end(sid, ok=False, error=type(e).__name__)
             return None
+        if self.tracer is not None:
+            self.tracer.end(sid, ok=bool(reply.get("ok")))
         self._last_beat = time.monotonic()
         if not reply.get("ok"):
             exc = _RAISABLE.get(reply.get("error"), RuntimeError)
@@ -447,6 +467,8 @@ class WorkerProxy:
         self.metrics.tokens_emitted = m["tokens_emitted"]
         self.metrics.rejected = m["rejected"]
         self.metrics.retries = m["retries"]
+        if snap.get("registry") is not None:
+            self.metrics._registry_snap = snap["registry"]
         self.scheduler.queue_depth = snap["sched"]["queue_depth"]
         self.scheduler.resident = snap["sched"]["resident"]
         self.pool.update(snap["pool"])

@@ -27,6 +27,11 @@ With a ``sink`` (``repro.events.EventSink``) every non-OK verdict
 streams to the append-only JSONL log as it happens — over a multi-hour
 run the skip/rollback history survives the process (the long-run
 metrics seam PR 7 left open; ``launch/train.py --events`` wires it).
+With a ``registry`` (:class:`repro.obs.MetricsRegistry`) every verdict
+ALSO retires into bounded-memory counters + streaming histograms
+(loss, grad norm) that periodic ``metrics_snapshot`` events carry to
+the same log — the ISSUE-10 close of the "streaming those guard
+verdicts to a metrics sink over long runs" ROADMAP item.
 """
 from __future__ import annotations
 
@@ -60,9 +65,11 @@ class TrainGuard:
 
     OK, SKIP, ROLLBACK = "ok", "skip", "rollback"
 
-    def __init__(self, cfg: GuardConfig = GuardConfig(), *, sink=None):
+    def __init__(self, cfg: GuardConfig = GuardConfig(), *, sink=None,
+                 registry=None):
         self.cfg = cfg
         self.sink = sink                  # optional EventSink (JSONL)
+        self.registry = registry          # optional obs.MetricsRegistry
         self._window: deque[float] = deque(maxlen=cfg.window)
         self._step = 0
         self.bad_streak = 0
@@ -74,10 +81,13 @@ class TrainGuard:
     def median(self) -> float | None:
         return statistics.median(self._window) if self._window else None
 
-    def observe(self, loss: float, grads_finite: bool = True) -> str:
+    def observe(self, loss: float, grads_finite: bool = True,
+                grad_norm: float | None = None) -> str:
         """Judge one completed step.  Healthy losses enter the rolling
         window; bad ones never do (a spike must not poison the baseline
-        that detects the next spike)."""
+        that detects the next spike).  ``grad_norm`` is optional — pass
+        it only if the driver already has it on host (the guard never
+        forces a device sync)."""
         reason = None
         if not grads_finite or not math.isfinite(loss):
             reason = "nonfinite"
@@ -88,17 +98,29 @@ class TrainGuard:
             reason = "spike"
             self.spikes += 1
         self._step += 1
+        reg = self.registry
+        if reg is not None:
+            if math.isfinite(loss):
+                reg.observe("train.loss", float(loss))
+            if grad_norm is not None and math.isfinite(grad_norm):
+                reg.observe("train.grad_norm", float(grad_norm))
         if reason is None:
             self._window.append(float(loss))
             self.bad_streak = 0
+            if reg is not None:
+                reg.inc("guard.ok")
             return self.OK
         self.bad_streak += 1
         if self.bad_streak >= self.cfg.rollback_after:
             self.rollbacks += 1
             self.bad_streak = 0
+            if reg is not None:
+                reg.inc("guard.rollback")
             self._emit("guard_rollback", reason=reason, loss=float(loss))
             return self.ROLLBACK
         self.skipped += 1
+        if reg is not None:
+            reg.inc("guard.skip")
         self._emit("guard_skip", reason=reason, loss=float(loss),
                    streak=self.bad_streak)
         return self.SKIP

@@ -8,7 +8,7 @@ import json
 import pytest
 
 from repro.events import EventSink, read_events
-from repro.serve.metrics import ServeMetrics
+from repro.serve.metrics import ServeMetrics, fleet_summary
 from repro.train.guards import GuardConfig, TrainGuard
 
 
@@ -110,3 +110,60 @@ def test_shared_sink_interleaves_producers(tmp_path):
     assert [e["seq"] for e in evs] == [0, 1, 2]
     raw = [json.loads(line) for line in open(path)]
     assert len(raw) == 3
+
+
+def test_read_events_kind_and_offset_combined(tmp_path):
+    """kind= filtering composes with offset= resume: the filter applies
+    only to records AFTER the offset, and next_offset is filter-blind
+    (it advances past every complete line, matched or not)."""
+    path = str(tmp_path / "inc.jsonl")
+    with EventSink(path) as sink:
+        sink.emit("a", n=0)
+        sink.emit("b", n=1)
+    first, off = read_events(path, "a", with_offset=True)
+    assert [e["n"] for e in first] == [0]
+    with EventSink(path) as sink:
+        sink.emit("a", n=2)
+        sink.emit("b", n=3)
+        sink.emit("a", n=4)
+    tail = read_events(path, "a", offset=off)
+    assert [e["n"] for e in tail] == [2, 4]
+    # unfiltered resume from the same offset sees every new record
+    assert [e["n"] for e in read_events(path, offset=off)] == [2, 3, 4]
+    # resuming at EOF yields nothing and a stable offset
+    rest, end = read_events(path, offset=off, with_offset=True)
+    again, end2 = read_events(path, offset=end, with_offset=True)
+    assert again == [] and end2 == end
+
+
+def test_fleet_summary_empty_fleet(tmp_path):
+    """An empty replica list must aggregate to an all-zero fleet view,
+    not divide by zero or KeyError."""
+    out = fleet_summary([])
+    assert out["n_requests"] == out["n_done"] == out["total_tokens"] == 0
+    assert out["wall_s"] == 0.0
+    assert out["tokens_per_s"] == out["goodput_tokens_per_s"] == 0.0
+    assert out["per_replica"] == []
+
+
+def test_fleet_summary_all_rejected():
+    """Replicas that rejected everything: zero wall clock, zero tokens —
+    rates stay 0.0 instead of dividing by zero."""
+    m0, m1 = ServeMetrics(), ServeMetrics()
+    for m in (m0, m1):
+        m.on_reject()
+        m.on_reject()
+    out = fleet_summary([m0.summary(), m1.summary()])
+    assert out["n_rejected"] == 4
+    assert out["n_requests"] == out["n_done"] == 0
+    assert out["tokens_per_s"] == 0.0
+    assert out["goodput_tokens_per_s"] == 0.0
+
+
+def test_fleet_summary_missing_keys_tolerated():
+    """A dead worker's synthesized mirror summary may lack keys newer
+    summaries carry; aggregation treats them as 0."""
+    full = ServeMetrics().summary()
+    out = fleet_summary([full, {"n_done": 2, "total_tokens": 9}])
+    assert out["n_done"] == 2 and out["total_tokens"] == 9
+    assert len(out["per_replica"]) == 2

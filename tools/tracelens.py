@@ -1,0 +1,249 @@
+#!/usr/bin/env python
+"""tracelens: render repro.obs span records from a JSONL event stream.
+
+The serving/training drivers (``--trace``) emit paired ``span_begin`` /
+``span_end`` records (see ``repro.obs.trace``).  This tool reconstructs
+them into:
+
+* per-request timelines (``--trace GID``): the request's root span with
+  its queue / prefill / decode / migrate / recover segments and explicit
+  ``(gap)`` fillers, so the segments SUM to the end-to-end latency by
+  construction;
+* a fleet Gantt (``--gantt``): one row per request root span on a
+  shared wall-clock axis;
+* a latency-breakdown table (``--table``): per span name, streaming
+  log2-bucket percentiles (the same ``repro.obs.Histogram`` the serving
+  metrics use — this tool never holds per-sample lists either);
+* a Chrome/Perfetto ``trace.json`` (``--json out.json``): complete
+  ("X") events per closed span, "B" events for spans a crash left open,
+  one Perfetto process lane per tracer pid (r0/r1/router/journal/...).
+
+Usage:
+    python tools/tracelens.py events.jsonl
+    python tools/tracelens.py events.jsonl --table --gantt
+    python tools/tracelens.py events.jsonl --trace 3
+    python tools/tracelens.py events.jsonl --json trace.json
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                                "..", "src"))
+
+from repro.events import read_events               # noqa: E402
+from repro.obs.registry import Histogram           # noqa: E402
+
+#: span_begin fields that are structure, not user attrs
+_META = ("kind", "seq", "t", "name", "sid", "trace", "parent", "pid", "ts")
+
+
+def _mk(b: dict, e: dict | None) -> dict:
+    return {
+        "name": b["name"], "sid": b["sid"], "trace": b.get("trace"),
+        "parent": b.get("parent"), "pid": b.get("pid", "main"),
+        "t0": b["ts"], "t1": None if e is None else e["ts"],
+        "dur": None if e is None else e["ts"] - b["ts"],
+        "attrs": {**{k: v for k, v in b.items() if k not in _META},
+                  **({} if e is None else
+                     {k: v for k, v in e.items()
+                      if k not in ("kind", "seq", "t", "sid", "ts")})},
+    }
+
+
+def load_spans(path: str) -> tuple[list[dict], list[dict]]:
+    """Pair span records from an event file.
+
+    Returns ``(closed, open)`` — open spans are begins whose end never
+    hit the stream (a crash, or work still in flight at close); they are
+    an observation, not an error."""
+    begins: dict = {}
+    closed: list[dict] = []
+    for r in read_events(path):
+        kind = r.get("kind")
+        if kind == "span_begin":
+            begins[r["sid"]] = r
+        elif kind == "span_end":
+            b = begins.pop(r["sid"], None)
+            if b is not None:
+                closed.append(_mk(b, r))
+    return closed, [_mk(b, None) for b in begins.values()]
+
+
+def by_trace(spans: list[dict]) -> dict:
+    out: dict = {}
+    for s in spans:
+        if s["trace"] is not None:
+            out.setdefault(s["trace"], []).append(s)
+    for v in out.values():
+        v.sort(key=lambda s: s["t0"])
+    return out
+
+
+def _root(spans: list[dict]) -> dict:
+    """The request's root span: a parentless fleet_req/req if present,
+    else the earliest span."""
+    roots = [s for s in spans if s["parent"] is None
+             and s["name"] in ("fleet_req", "req")]
+    if roots:
+        return min(roots, key=lambda s: s["t0"])
+    return min(spans, key=lambda s: s["t0"])
+
+
+def segments(spans: list[dict], root: dict | None = None) -> list[dict]:
+    """Decompose a request's root span into non-overlapping labelled
+    segments (children in t0 order, ``(gap)`` fillers between them).
+    The segment durations sum to the root duration EXACTLY — gaps make
+    unattributed time explicit instead of silently absorbing it."""
+    root = _root(spans) if root is None else root
+    end = root["t1"] if root["t1"] is not None else \
+        max((s["t1"] for s in spans if s["t1"] is not None),
+            default=root["t0"])
+    segs: list[dict] = []
+    cur = root["t0"]
+
+    def _push(name, a, b, span=None):
+        if b > a:
+            segs.append({"name": name, "t0": a, "t1": b, "dur": b - a,
+                         "pid": None if span is None else span["pid"]})
+
+    for s in sorted(spans, key=lambda s: s["t0"]):
+        if s is root or s["t0"] >= end:
+            continue
+        s1 = min(s["t1"] if s["t1"] is not None else end, end)
+        if s["t0"] > cur:
+            _push("(gap)", cur, s["t0"])
+        # overlapping children (e.g. a step span crossing a decode) are
+        # clipped to the uncovered remainder so the sum stays exact
+        _push(s["name"], max(s["t0"], cur), max(s1, cur), s)
+        cur = max(cur, s1)
+    _push("(gap)", cur, end)
+    return segs
+
+
+def timeline_text(trace, spans: list[dict]) -> str:
+    root = _root(spans)
+    e2e = (root["dur"] if root["dur"] is not None
+           else sum(s["dur"] for s in segments(spans, root)))
+    lines = [f"trace {trace}: {root['name']} on {root['pid']} "
+             f"{'%.3f ms' % (e2e * 1e3)}"
+             f"{' (OPEN)' if root['t1'] is None else ''} "
+             f"{root['attrs']}"]
+    for seg in segments(spans, root):
+        off = (seg["t0"] - root["t0"]) * 1e3
+        lane = f" [{seg['pid']}]" if seg["pid"] else ""
+        lines.append(f"  +{off:9.3f} ms  {seg['name']:<12} "
+                     f"{seg['dur']*1e3:9.3f} ms{lane}")
+    total = sum(s["dur"] for s in segments(spans, root))
+    lines.append(f"  {'segments sum':>25} {total*1e3:9.3f} ms")
+    return "\n".join(lines)
+
+
+def latency_table(spans: list[dict]) -> str:
+    hists: dict[str, Histogram] = {}
+    for s in spans:
+        if s["dur"] is not None:
+            hists.setdefault(s["name"], Histogram()).observe(s["dur"])
+    rows = [f"{'span':<16} {'n':>6} {'mean ms':>9} {'p50 ms':>9} "
+            f"{'p95 ms':>9} {'max ms':>9}"]
+    for name in sorted(hists):
+        h = hists[name]
+        rows.append(f"{name:<16} {h.n:>6} {h.mean*1e3:>9.3f} "
+                    f"{h.quantile(0.5)*1e3:>9.3f} "
+                    f"{h.quantile(0.95)*1e3:>9.3f} {h.max*1e3:>9.3f}")
+    return "\n".join(rows)
+
+
+def gantt(spans: list[dict], width: int = 64) -> str:
+    """One row per request root span against the shared clock."""
+    groups = by_trace(spans)
+    if not groups:
+        return "(no request spans)"
+    roots = {t: _root(g) for t, g in groups.items()}
+    t_lo = min(r["t0"] for r in roots.values())
+    t_hi = max((r["t1"] if r["t1"] is not None else r["t0"])
+               for r in roots.values())
+    span_s = max(t_hi - t_lo, 1e-9)
+    rows = [f"fleet gantt ({span_s*1e3:.1f} ms window, {len(roots)} "
+            f"requests)"]
+    for t in sorted(roots, key=lambda t: roots[t]["t0"]):
+        r = roots[t]
+        a = int((r["t0"] - t_lo) / span_s * (width - 1))
+        b = a if r["t1"] is None else \
+            int((r["t1"] - t_lo) / span_s * (width - 1))
+        bar = " " * a + "#" * max(1, b - a + 1)
+        state = r["attrs"].get("state", "OPEN" if r["t1"] is None else "?")
+        rows.append(f"  {str(t):>4} |{bar:<{width}}| {state}")
+    return "\n".join(rows)
+
+
+def perfetto(closed: list[dict], open_spans: list[dict]) -> dict:
+    """Chrome trace-event JSON (load in ui.perfetto.dev or
+    chrome://tracing).  One process lane per tracer pid; ts/dur in µs,
+    normalized to the earliest span."""
+    all_spans = closed + open_spans
+    if not all_spans:
+        return {"traceEvents": []}
+    t_lo = min(s["t0"] for s in all_spans)
+    pids = {p: i + 1 for i, p in
+            enumerate(sorted({s["pid"] for s in all_spans}))}
+    ev = [{"ph": "M", "name": "process_name", "pid": n, "tid": 0,
+           "args": {"name": p}} for p, n in pids.items()]
+    for s in all_spans:
+        args = {"trace": s["trace"], "sid": s["sid"], **s["attrs"]}
+        base = {"name": s["name"], "pid": pids[s["pid"]],
+                "tid": 0 if s["trace"] is None else int(s["trace"]),
+                "ts": (s["t0"] - t_lo) * 1e6, "cat": "repro",
+                "args": args}
+        if s["t1"] is None:
+            ev.append({**base, "ph": "B"})      # left open by a crash
+        else:
+            ev.append({**base, "ph": "X", "dur": s["dur"] * 1e6})
+    return {"traceEvents": ev, "displayTimeUnit": "ms"}
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("events", help="JSONL event file (--events output)")
+    ap.add_argument("--trace", default=None,
+                    help="render one request's timeline (gid/rid)")
+    ap.add_argument("--table", action="store_true",
+                    help="latency breakdown per span name")
+    ap.add_argument("--gantt", action="store_true",
+                    help="one-row-per-request fleet Gantt")
+    ap.add_argument("--json", default=None, metavar="OUT",
+                    help="write Chrome/Perfetto trace JSON")
+    args = ap.parse_args()
+
+    closed, open_spans = load_spans(args.events)
+    groups = by_trace(closed + open_spans)
+    print(f"{args.events}: {len(closed)} spans "
+          f"({len(open_spans)} left open), {len(groups)} traces")
+    if args.trace is not None:
+        key = int(args.trace) if args.trace.lstrip("-").isdigit() \
+            else args.trace
+        if key not in groups:
+            print(f"no spans for trace {key!r} "
+                  f"(have {sorted(groups)[:16]})")
+            return 1
+        print(timeline_text(key, groups[key]))
+    if args.gantt:
+        print(gantt(closed + open_spans))
+    if args.table:
+        print(latency_table(closed))
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(perfetto(closed, open_spans), f, indent=1,
+                      sort_keys=True)
+        print(f"wrote {args.json} "
+              f"({len(closed) + len(open_spans)} events)")
+    if not (args.trace or args.gantt or args.table or args.json):
+        print(latency_table(closed))
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())
